@@ -1,0 +1,72 @@
+"""Paper Figs. 5-8: entropy statistics of detected clusters.
+
+Fig 5: Shannon entropy separation RSO vs star clusters.
+Fig 6: events-per-cluster distribution around the min_events=5 box.
+Fig 7: metric correlation matrix (entropy ~ count ~ contrast).
+Fig 8: temporal entropy stability of a tracked RSO vs noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core.pipeline import PipelineConfig, run_recording
+from repro.data.synthetic import make_recording
+
+
+def bench() -> list[tuple[str, float, str]]:
+    rec = make_recording(seed=4, duration_s=1.5, n_rsos=2)
+    cfg = PipelineConfig()
+    results = run_recording(rec, cfg, with_tracking=True)
+
+    rso_h, star_h, counts, mats = [], [], [], []
+    for res in results:
+        valid = np.asarray(res.clusters.valid)
+        if not valid.any():
+            continue
+        cx = np.asarray(res.clusters.centroid_x)
+        cy = np.asarray(res.clusters.centroid_y)
+        ct = np.asarray(res.clusters.centroid_t)
+        h = res.metrics["shannon_entropy"]
+        counts.extend(np.asarray(res.clusters.count)[valid].tolist())
+        mats.append(M.metric_matrix(
+            {k: np.asarray(v) for k, v in res.metrics.items()}
+        )[valid])
+        for k in np.flatnonzero(valid):
+            t_ev = res.t_start_us + float(ct[k])
+            is_rso = False
+            for r in range(rec.rso_tracks.shape[0]):
+                px, py = rec.rso_position(r, np.array([t_ev]))
+                if np.hypot(px[0] - cx[k], py[0] - cy[k]) <= 14:
+                    is_rso = True
+            (rso_h if is_rso else star_h).append(float(h[k]))
+
+    rows = []
+    rows.append(("fig5/rso_entropy", 0.0,
+                 f"mean{np.mean(rso_h):.3f}_std{np.std(rso_h):.3f}_n{len(rso_h)}"))
+    rows.append(("fig5/star_entropy", 0.0,
+                 f"mean{np.mean(star_h):.3f}_std{np.std(star_h):.3f}_n{len(star_h)}"))
+    rows.append(("fig5/separation", 0.0,
+                 f"rso_gt_star_{np.mean(rso_h) > np.mean(star_h)}"))
+
+    counts = np.asarray(counts)
+    rows.append(("fig6/events_per_cluster", 0.0,
+                 f"median{np.median(counts):.0f}_p90_{np.percentile(counts, 90):.0f}"
+                 f"_in5to20_{np.mean((counts >= 5) & (counts <= 20)):.2f}"))
+
+    mat = np.concatenate(mats)
+    corr = np.asarray(M.correlation_matrix(mat))
+    names = M.METRIC_NAMES
+    i_h, i_cnt, i_con = names.index("shannon_entropy"), names.index("event_count"), names.index("local_contrast")
+    rows.append(("fig7/corr_entropy_count", 0.0, f"{corr[i_h, i_cnt]:.2f}"))
+    rows.append(("fig7/corr_entropy_contrast", 0.0, f"{corr[i_h, i_con]:.2f}"))
+
+    # Fig 8: entropy EMA stability of confirmed tracks across 50 windows.
+    ent_series = [
+        np.asarray(r.tracks.entropy)[np.asarray(r.tracks.active)]
+        for r in results[-50:] if r.tracks is not None
+    ]
+    flat = [e.mean() for e in ent_series if len(e)]
+    rows.append(("fig8/track_entropy_stability", 0.0,
+                 f"std{np.std(flat):.4f}_over{len(flat)}windows"))
+    return rows

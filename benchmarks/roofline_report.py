@@ -1,0 +1,79 @@
+"""Aggregate dry-run JSON artifacts into the EXPERIMENTS.md roofline
+table. Also exposes the baseline rows as benchmark CSV."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "dryrun_results"
+
+
+def load_records(mesh: str | None = None, variant: str | None = "") -> list[dict]:
+    """variant="" -> baselines only; None -> everything."""
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if variant is not None and r.get("variant", "") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def markdown_table(mesh: str = "single", variant: str | None = "") -> str:
+    rows = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| useful/HLO | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh, variant):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED: {r.get('error','')[:40]} |")
+            continue
+        t = r["roofline"]
+        peak = r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} "
+            f"| {t['bottleneck']} | {ratio:.2f} | {peak:.1f} |"
+            if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} "
+            f"| {t['bottleneck']} | - | {peak:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def bench() -> list[tuple[str, float, str]]:
+    rows = []
+    recs = load_records("single")
+    if not recs:
+        return [("roofline/missing", 0.0, "run launch.dryrun first")]
+    n_ok = sum(r["ok"] for r in recs)
+    rows.append(("roofline/cells_single_pod", 0.0, f"{n_ok}of{len(recs)}_ok"))
+    multi = load_records("multi")
+    rows.append(
+        ("roofline/cells_multi_pod", 0.0,
+         f"{sum(r['ok'] for r in multi)}of{len(multi)}_ok")
+    )
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        t = r["roofline"]
+        bound = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+        frac = t["t_compute_s"] / bound if bound else 0.0
+        rows.append(
+            (f"roofline/{r['arch']}/{r['shape']}", bound * 1e6,
+             f"{t['bottleneck']}_computefrac{frac:.2f}")
+        )
+    return rows

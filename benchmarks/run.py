@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Select subsets with
+``python -m benchmarks.run table1 fig10``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks._common import emit
+
+MODULES = {
+    "table1": "benchmarks.table1_algorithms",
+    "table3": "benchmarks.table3_latency",
+    "table4": "benchmarks.table4_system",
+    "table5": "benchmarks.table5_scaling",
+    "fig10": "benchmarks.fig10_threshold",
+    "fig5_8": "benchmarks.fig5_8_entropy",
+    "roofline": "benchmarks.roofline_report",
+}
+
+
+def main() -> None:
+    selected = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    for key in selected:
+        mod_name = MODULES[key]
+        t0 = time.time()
+        mod = __import__(mod_name, fromlist=["bench"])
+        try:
+            rows = mod.bench()
+        except Exception as e:  # noqa: BLE001
+            rows = [(f"{key}/ERROR", 0.0, f"{type(e).__name__}_{e}")]
+        emit(rows)
+        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table I: clustering-algorithm comparison (grid vs K-Means vs
+DBSCAN) — measured throughput + complexity scaling on identical batches."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks._common import time_fn
+from repro.core.baselines import dbscan, kmeans
+from repro.core.events import batch_from_arrays
+from repro.core.grid_clustering import GridConfig, grid_cluster
+
+
+def _batch(n: int, seed: int = 0, capacity: int | None = None):
+    rng = np.random.default_rng(seed)
+    return batch_from_arrays(
+        rng.integers(0, 640, n), rng.integers(0, 480, n),
+        np.arange(n), rng.integers(0, 2, n),
+        capacity or n,
+    )
+
+
+def bench() -> list[tuple[str, float, str]]:
+    rows = []
+    grid_fn = jax.jit(lambda b: grid_cluster(b, GridConfig()))
+    for n in (64, 128, 256, 512, 1024):
+        b = _batch(n)
+        us_grid = time_fn(grid_fn, b)
+        rows.append(
+            (f"table1/grid_n{n}", us_grid, f"{n / us_grid:.2f}Mev_s")
+        )
+    for n in (64, 128, 256, 512):
+        b = _batch(n)
+        us_km = time_fn(lambda bb: kmeans(bb, k=8, iters=16), b)
+        rows.append((f"table1/kmeans_n{n}", us_km, f"{n / us_km:.2f}Mev_s"))
+        us_db = time_fn(lambda bb: dbscan(bb, eps=8.0, min_pts=5), b)
+        rows.append((f"table1/dbscan_n{n}", us_db, f"{n / us_db:.2f}Mev_s"))
+    # complexity scaling exponents (log-log slope between n=128 and n=512)
+    def slope(prefix):
+        t = {int(r[0].split("_n")[1]): r[1] for r in rows if r[0].startswith(prefix)}
+        return np.log(t[512] / t[128]) / np.log(4)
+
+    rows.append(("table1/slope_grid", 0.0, f"O(n^{slope('table1/grid'):.2f})"))
+    rows.append(("table1/slope_kmeans", 0.0, f"O(n^{slope('table1/kmeans'):.2f})"))
+    rows.append(("table1/slope_dbscan", 0.0, f"O(n^{slope('table1/dbscan'):.2f})"))
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Table III: latency breakdown per processing stage (250-event
+batch). Stages mirror the paper's pipeline; 'fused kernel' shows the
+beyond-paper quantize+aggregate fusion (paper Sec. VI projects < 30 ms
+from exactly this offload)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks._common import time_fn
+from repro.core import metrics as M
+from repro.core.events import batch_from_arrays, persistent_event_filter, roi_filter
+from repro.core.grid_clustering import (
+    GridConfig,
+    cell_histogram,
+    clusters_from_histogram,
+)
+from repro.core.pipeline import PipelineConfig, make_process_window
+from repro.core.tracking import TrackerConfig, init_tracks, tracker_step
+from repro.data.synthetic import make_recording
+from repro.kernels import ops as kops
+
+
+def bench() -> list[tuple[str, float, str]]:
+    rec = make_recording(seed=1, duration_s=0.2)
+    n = 250
+    b = batch_from_arrays(rec.x[:n], rec.y[:n], rec.t[:n], rec.p[:n])
+    cfg = GridConfig()
+    rows = []
+
+    cond = jax.jit(lambda bb: persistent_event_filter(roi_filter(bb)))
+    rows.append(("table3/conditioning", time_fn(cond, b), "roi+hotpixel"))
+
+    bb = cond(b)
+    quant = jax.jit(lambda e: cell_histogram(e, cfg))
+    rows.append(("table3/quantize_accumulate_jnp", time_fn(quant, bb), "xla"))
+
+    fused = lambda e: kops.cluster_accum(
+        e.x, e.y, e.t, e.valid, cell_size=cfg.cell_size,
+        grid_w=cfg.grid_w, grid_h=cfg.grid_h,
+    )
+    rows.append(
+        ("table3/quantize_accumulate_kernel", time_fn(fused, bb),
+         "pallas_interpret")
+    )
+
+    hist = quant(bb)
+    form = jax.jit(lambda h: clusters_from_histogram(*h, cfg))
+    rows.append(("table3/threshold_centroid", time_fn(form, hist), "topk"))
+
+    clusters = form(hist)
+    met = jax.jit(lambda e, c: M.cluster_metrics(M.reconstruct_frame(e), c))
+    rows.append(("table3/metrics_48x48", time_fn(met, bb, clusters), "6metrics"))
+
+    mets = met(bb, clusters)
+    tcfg = TrackerConfig()
+    st = init_tracks(tcfg)
+    track = jax.jit(lambda s, c, e: tracker_step(s, c, e, tcfg)[0])
+    rows.append(
+        ("table3/tracking", time_fn(track, st, clusters, mets["shannon_entropy"]),
+         "alpha_beta")
+    )
+
+    whole = make_process_window(PipelineConfig())
+    us = time_fn(whole, b)
+    rows.append(("table3/total_window", us, f"{'<62ms' if us < 62000 else '>62ms'}"))
+    return rows

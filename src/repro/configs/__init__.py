@@ -1,0 +1,10 @@
+"""Architecture registry: one config module per assigned architecture."""
+from repro.configs.base import (  # noqa: F401
+    LM_SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    applicable_shapes,
+    get_config,
+    list_archs,
+    register,
+)

@@ -1,0 +1,32 @@
+"""Core library: the paper's grid-clustering RSO detection pipeline."""
+from repro.core.events import (  # noqa: F401
+    EventBatch,
+    BatcherConfig,
+    dual_threshold_batches,
+    pack_words,
+    unpack_words,
+    roi_filter,
+    persistent_event_filter,
+)
+from repro.core.grid_clustering import (  # noqa: F401
+    Clusters,
+    GridConfig,
+    grid_cluster,
+    quantize,
+    quantize_packed,
+    form_clusters,
+)
+from repro.core.pipeline import (  # noqa: F401
+    PipelineConfig,
+    make_process_window,
+    run_recording,
+    evaluate_detection,
+    threshold_sweep,
+)
+from repro.core.tracking import (  # noqa: F401
+    TrackerConfig,
+    TrackState,
+    tracker_step,
+    track_recording,
+    confirmed,
+)

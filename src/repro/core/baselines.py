@@ -1,0 +1,132 @@
+"""Clustering baselines from the paper's Table I: K-Means and DBSCAN.
+
+The paper argues grid clustering dominates both for streaming event data
+(O(n), single pass, no k, minimal state). To reproduce the comparison we
+implement both baselines in JAX with fixed shapes so the complexity and
+throughput claims can be benchmarked head-to-head
+(``benchmarks/table1_algorithms.py``).
+
+* :func:`kmeans` — Lloyd's algorithm, O(n * k * i), k-means++-style farthest
+  point init, masked for padded events.
+* :func:`dbscan` — O(n^2) pairwise-distance density clustering; label
+  propagation over the core-point adjacency graph runs as an iterated
+  min-label diffusion (matrix-vector, fixed iterations = ceil(log2 n) + safety)
+  which is the TPU-friendly form of the BFS used on CPUs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import EventBatch
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, 2) float32
+    assignment: jax.Array  # (E,) int32, -1 for invalid events
+    counts: jax.Array  # (k,) int32
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(batch: EventBatch, k: int = 8, iters: int = 16) -> KMeansResult:
+    pts = jnp.stack([batch.x, batch.y], axis=-1).astype(jnp.float32)  # (E,2)
+    valid = batch.valid
+    big = jnp.float32(1e12)
+
+    # Farthest-point init (deterministic k-means++ flavour).
+    first = jnp.argmax(valid)  # first valid point
+
+    def init_step(carry, _):
+        cents, n_chosen = carry
+        d = jnp.min(
+            jnp.sum((pts[:, None, :] - cents[None, :, :]) ** 2, -1)
+            + jnp.where(jnp.arange(k)[None, :] < n_chosen, 0.0, big),
+            axis=1,
+        )
+        d = jnp.where(valid, d, -1.0)
+        nxt = jnp.argmax(d)
+        cents = cents.at[n_chosen].set(pts[nxt])
+        return (cents, n_chosen + 1), None
+
+    cents0 = jnp.zeros((k, 2), jnp.float32).at[0].set(pts[first])
+    (cents, _), _ = jax.lax.scan(init_step, (cents0, 1), None, length=k - 1)
+
+    def lloyd(cents, _):
+        d = jnp.sum((pts[:, None, :] - cents[None, :, :]) ** 2, -1)  # (E,k)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32) * valid[:, None]
+        counts = onehot.sum(0)
+        sums = onehot.T @ pts
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(lloyd, cents, None, length=iters)
+    d = jnp.sum((pts[:, None, :] - cents[None, :, :]) ** 2, -1)
+    assign = jnp.where(valid, jnp.argmin(d, axis=1), -1)
+    counts = jnp.sum(
+        jax.nn.one_hot(assign, k, dtype=jnp.int32) * valid[:, None].astype(jnp.int32), 0
+    )
+    return KMeansResult(cents, assign.astype(jnp.int32), counts)
+
+
+class DBSCANResult(NamedTuple):
+    labels: jax.Array  # (E,) int32 cluster label; -1 = noise/invalid
+    n_clusters: jax.Array  # scalar int32
+    core_mask: jax.Array  # (E,) bool
+
+
+@partial(jax.jit, static_argnames=("eps", "min_pts"))
+def dbscan(batch: EventBatch, eps: float = 8.0, min_pts: int = 5) -> DBSCANResult:
+    pts = jnp.stack([batch.x, batch.y], axis=-1).astype(jnp.float32)
+    valid = batch.valid
+    n = pts.shape[0]
+    d2 = jnp.sum((pts[:, None, :] - pts[None, :, :]) ** 2, -1)  # O(n^2)
+    within = (d2 <= eps * eps) & valid[:, None] & valid[None, :]
+    degree = within.sum(-1)
+    core = (degree >= min_pts) & valid
+
+    # Connectivity: core-core edges; border points attach to a core point.
+    core_adj = within & core[:, None] & core[None, :]
+
+    # Min-label diffusion: start with own index, iterate label = min over
+    # core neighbours. log2(n) doublings suffice for path compression on
+    # the doubled adjacency; we conservatively run 2*ceil(log2 n) steps.
+    labels0 = jnp.where(core, jnp.arange(n), n)  # n = +inf sentinel
+
+    def step(labels, _):
+        neigh = jnp.where(core_adj, labels[None, :], n)
+        new = jnp.minimum(labels, neigh.min(-1))
+        # pointer jumping (path compression) => O(log n) convergence
+        jumped = jnp.where(new < n, new[jnp.clip(new, 0, n - 1)], n)
+        return jnp.minimum(new, jumped), None
+
+    iters = 2 * max(1, n.bit_length())
+    labels, _ = jax.lax.scan(step, labels0, None, length=iters)
+
+    # Border points: adopt the min label among adjacent core points.
+    border_neigh = jnp.where(within & core[None, :], labels[None, :], n)
+    border_label = border_neigh.min(-1)
+    final = jnp.where(core, labels, jnp.where(valid & (border_label < n), border_label, -1))
+
+    # Compact labels to 0..C-1 by ranking unique roots.
+    is_root = (final == jnp.arange(n)) & core
+    rank = jnp.cumsum(is_root.astype(jnp.int32)) - 1
+    compact = jnp.where(final >= 0, rank[jnp.clip(final, 0, n - 1)], -1)
+    n_clusters = is_root.sum().astype(jnp.int32)
+    return DBSCANResult(compact.astype(jnp.int32), n_clusters, core)
+
+
+def dbscan_centroids(
+    batch: EventBatch, result: DBSCANResult, max_clusters: int = 32
+) -> tuple[jax.Array, jax.Array]:
+    """Per-cluster centroids (max_clusters, 2) + counts, padded with -1."""
+    onehot = jax.nn.one_hot(result.labels, max_clusters, dtype=jnp.float32)
+    onehot = onehot * batch.valid[:, None]
+    counts = onehot.sum(0)
+    pts = jnp.stack([batch.x, batch.y], -1).astype(jnp.float32)
+    sums = onehot.T @ pts
+    cents = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), -1.0)
+    return cents, counts.astype(jnp.int32)

@@ -1,0 +1,167 @@
+"""Track formation across event windows (paper Sec. III-D, Fig. 8).
+
+The paper's second detection stage enforces *spatial coherence*: clusters
+must form "continuous patterns consistent with expected orbital motion".
+We implement that as a fixed-capacity constant-velocity (alpha-beta)
+multi-target tracker:
+
+* greedy nearest-neighbour association with a gating radius,
+* alpha-beta state update (position + velocity),
+* hit/miss bookkeeping; a track is *confirmed* after ``confirm_hits``
+  consecutive associations and killed after ``max_misses`` misses.
+
+Everything is fixed shape: MAX_TRACKS slots, jit/scan friendly, so a whole
+recording is processed with one ``lax.scan`` over windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid_clustering import Clusters
+
+MAX_TRACKS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class TrackerConfig:
+    gate: float = 24.0  # px association gate (1.5 cells)
+    alpha: float = 0.6  # position gain
+    beta: float = 0.25  # velocity gain
+    confirm_hits: int = 3
+    max_misses: int = 2
+    max_tracks: int = MAX_TRACKS
+
+
+class TrackState(NamedTuple):
+    x: jax.Array  # (T,) float32
+    y: jax.Array  # (T,)
+    vx: jax.Array  # (T,) px / window
+    vy: jax.Array  # (T,)
+    hits: jax.Array  # (T,) int32
+    misses: jax.Array  # (T,) int32
+    age: jax.Array  # (T,) int32
+    active: jax.Array  # (T,) bool
+    entropy: jax.Array  # (T,) float32 EMA of cluster Shannon entropy (Fig. 8)
+
+
+def init_tracks(config: TrackerConfig = TrackerConfig()) -> TrackState:
+    t = config.max_tracks
+    zf = jnp.zeros((t,), jnp.float32)
+    zi = jnp.zeros((t,), jnp.int32)
+    return TrackState(zf, zf, zf, zf, zi, zi, zi, jnp.zeros((t,), bool), zf)
+
+
+def _greedy_assign(cost: jax.Array, gate: float) -> jax.Array:
+    """Greedy min-cost assignment. cost: (T, K). Returns (T,) index into K
+    or -1. Each detection is used at most once."""
+    t, k = cost.shape
+
+    def body(carry, ti):
+        assigned_det, out = carry
+        row = jnp.where(assigned_det, jnp.inf, cost[ti])
+        j = jnp.argmin(row)
+        ok = row[j] <= gate
+        assigned_det = assigned_det.at[j].set(assigned_det[j] | ok)
+        out = out.at[ti].set(jnp.where(ok, j, -1))
+        return (assigned_det, out), None
+
+    (_, out), _ = jax.lax.scan(
+        body, (jnp.zeros((k,), bool), jnp.full((t,), -1, jnp.int32)), jnp.arange(t)
+    )
+    return out
+
+
+def tracker_step(
+    state: TrackState,
+    clusters: Clusters,
+    cluster_entropy: jax.Array,
+    config: TrackerConfig = TrackerConfig(),
+) -> tuple[TrackState, jax.Array]:
+    """One tracker update. Returns (new_state, assignment (T,) det index)."""
+    t = config.max_tracks
+    # Predict.
+    px = state.x + state.vx
+    py = state.y + state.vy
+    # Cost = distance, inf for inactive tracks / invalid detections.
+    dx = px[:, None] - clusters.centroid_x[None, :]
+    dy = py[:, None] - clusters.centroid_y[None, :]
+    dist = jnp.sqrt(dx * dx + dy * dy)
+    cost = jnp.where(
+        state.active[:, None] & clusters.valid[None, :], dist, jnp.inf
+    )
+    assign = _greedy_assign(cost, config.gate)
+    matched = assign >= 0
+    ai = jnp.clip(assign, 0, clusters.centroid_x.shape[0] - 1)
+    mx = clusters.centroid_x[ai]
+    my = clusters.centroid_y[ai]
+    me = cluster_entropy[ai]
+
+    # Alpha-beta update for matched, coast for unmatched-active.
+    rx = mx - px
+    ry = my - py
+    nx = jnp.where(matched, px + config.alpha * rx, px)
+    ny = jnp.where(matched, py + config.alpha * ry, py)
+    nvx = jnp.where(matched, state.vx + config.beta * rx, state.vx)
+    nvy = jnp.where(matched, state.vy + config.beta * ry, state.vy)
+    hits = jnp.where(matched, state.hits + 1, state.hits)
+    misses = jnp.where(matched, 0, state.misses + state.active.astype(jnp.int32))
+    ent = jnp.where(matched, 0.7 * state.entropy + 0.3 * me, state.entropy)
+    active = state.active & (misses <= config.max_misses)
+
+    # Spawn new tracks from unassigned detections into inactive slots.
+    det_used = jnp.zeros((clusters.valid.shape[0],), bool).at[ai].set(
+        matched, mode="drop"
+    )
+    det_free = clusters.valid & ~det_used
+    slot_free = ~active
+    # Rank free slots and free detections; pair them by rank.
+    slot_rank = jnp.cumsum(slot_free.astype(jnp.int32)) - 1  # (T,)
+    det_rank = jnp.cumsum(det_free.astype(jnp.int32)) - 1  # (K,)
+    k = clusters.valid.shape[0]
+    # det index for each rank r: scatter rank -> det id
+    det_for_rank = jnp.full((t + k,), -1, jnp.int32).at[
+        jnp.where(det_free, det_rank, t + k - 1)
+    ].set(jnp.arange(k), mode="drop")
+    spawn_det = jnp.where(slot_free, det_for_rank[jnp.clip(slot_rank, 0, t + k - 1)], -1)
+    do_spawn = slot_free & (spawn_det >= 0)
+    si = jnp.clip(spawn_det, 0, k - 1)
+    nx = jnp.where(do_spawn, clusters.centroid_x[si], nx)
+    ny = jnp.where(do_spawn, clusters.centroid_y[si], ny)
+    nvx = jnp.where(do_spawn, 0.0, nvx)
+    nvy = jnp.where(do_spawn, 0.0, nvy)
+    hits = jnp.where(do_spawn, 1, hits)
+    misses = jnp.where(do_spawn, 0, misses)
+    ent = jnp.where(do_spawn, cluster_entropy[si], ent)
+    age = jnp.where(do_spawn, 0, state.age + active.astype(jnp.int32))
+    active = active | do_spawn
+
+    new = TrackState(nx, ny, nvx, nvy, hits, misses, age, active, ent)
+    return new, assign
+
+
+def confirmed(state: TrackState, config: TrackerConfig = TrackerConfig()) -> jax.Array:
+    """(T,) bool — tracks that passed the spatial-coherence stage."""
+    return state.active & (state.hits >= config.confirm_hits)
+
+
+def track_recording(
+    clusters_seq: Clusters,
+    entropy_seq: jax.Array,
+    config: TrackerConfig = TrackerConfig(),
+) -> tuple[TrackState, TrackState]:
+    """Scan the tracker over a stacked sequence of per-window clusters.
+
+    ``clusters_seq`` leaves have shape (W, K); ``entropy_seq`` is (W, K).
+    Returns (final_state, per-window stacked states).
+    """
+
+    def step(state, inp):
+        cl, ent = inp
+        new, _ = tracker_step(state, cl, ent, config)
+        return new, new
+
+    return jax.lax.scan(step, init_tracks(config), (clusters_seq, entropy_seq))

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    LENS_CONFIGS,
+    Recording,
+    make_recording,
+    make_validation_suite,
+)

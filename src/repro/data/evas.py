@@ -1,0 +1,55 @@
+"""EVAS dataset interface (Valdivia et al. 2025, kaggle.com/ds/5688319).
+
+The dataset is hosted on Kaggle and unavailable offline, so this module
+defines the on-disk interchange format the pipeline consumes and a
+loader that falls back to the calibrated synthetic generator. A real
+EVAS download converted to this .npz layout drops in without code
+changes:
+
+  arrays: x (N,) int32, y (N,) int32, t (N,) int64 microseconds,
+          p (N,) int32 polarity; optional: kind, obj, rso_tracks
+  attrs (0-d arrays): duration_us, name
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from repro.data.synthetic import Recording, make_validation_suite
+
+
+def save_recording(rec: Recording, path: str | Path) -> None:
+    np.savez_compressed(
+        path,
+        x=rec.x, y=rec.y, t=rec.t, p=rec.p,
+        kind=rec.kind, obj=rec.obj, rso_tracks=rec.rso_tracks,
+        duration_us=np.int64(rec.duration_us),
+        name=np.str_(rec.name),
+    )
+
+
+def load_recording(path: str | Path) -> Recording:
+    with np.load(path, allow_pickle=False) as z:
+        n = len(z["t"])
+        return Recording(
+            x=z["x"].astype(np.int32),
+            y=z["y"].astype(np.int32),
+            t=z["t"].astype(np.int64),
+            p=z["p"].astype(np.int32),
+            kind=z["kind"].astype(np.int32) if "kind" in z else np.zeros(n, np.int32),
+            obj=z["obj"].astype(np.int32) if "obj" in z else np.full(n, -1, np.int32),
+            rso_tracks=z["rso_tracks"] if "rso_tracks" in z else np.zeros((0, 4)),
+            duration_us=int(z["duration_us"]),
+            name=str(z["name"]) if "name" in z else Path(path).stem,
+        )
+
+
+def load_validation_suite(directory: str | Path | None = None) -> list[Recording]:
+    """Load real EVAS recordings if present, else the synthetic suite
+    calibrated to the paper's statistics (DESIGN.md §6)."""
+    if directory is not None:
+        files = sorted(Path(directory).glob("*.npz"))
+        if files:
+            return [load_recording(f) for f in files]
+    return make_validation_suite()

@@ -1,0 +1,56 @@
+"""Synthetic token pipeline for LM training examples/tests.
+
+A deterministic Zipf-ish Markov stream: learnable structure (so a ~100M
+model's loss visibly drops within a few hundred steps) without external
+data. Sharding-aware: ``sharded_batches`` device_puts each batch with the
+requested NamedSharding (the host->device path a real loader uses).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MarkovTokens:
+    """Order-1 Markov chain over the vocab with Zipf marginals."""
+
+    def __init__(self, vocab: int, seed: int = 0, branch: int = 16):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        # Each token transitions to `branch` successors with Zipf weights.
+        self.succ = rng.integers(0, vocab, size=(vocab, branch))
+        w = 1.0 / np.arange(1, branch + 1)
+        self.w = w / w.sum()
+        self.rng = rng
+
+    def sample(self, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq + 1), np.int32)
+        cur = self.rng.integers(0, self.vocab, size=batch)
+        out[:, 0] = cur
+        for t in range(1, seq + 1):
+            choice = self.rng.choice(len(self.w), size=batch, p=self.w)
+            cur = self.succ[cur, choice]
+            out[:, t] = cur
+        return out
+
+
+def batches(
+    vocab: int, batch: int, seq: int, n_steps: int, seed: int = 0
+) -> Iterator[dict[str, jnp.ndarray]]:
+    gen = MarkovTokens(vocab, seed)
+    for _ in range(n_steps):
+        toks = gen.sample(batch, seq)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+
+def sharded_batches(
+    vocab: int, batch: int, seq: int, n_steps: int, sharding, seed: int = 0
+) -> Iterator[dict[str, jnp.ndarray]]:
+    for b in batches(vocab, batch, seq, n_steps, seed):
+        yield jax.tree.map(lambda x: jax.device_put(x, sharding), b)

@@ -1,0 +1,9 @@
+"""Distribution substrate: sharding rules, collectives, fault tolerance."""
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    TRAIN_RULES,
+    SERVE_RULES,
+    hint,
+    partition_params,
+    batch_spec,
+)

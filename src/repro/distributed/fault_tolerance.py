@@ -1,0 +1,147 @@
+"""Fault tolerance and straggler mitigation for long-running jobs.
+
+Components, scoped the way a 1000-node deployment needs them:
+
+* :class:`HeartbeatMonitor` — tracks per-node liveness; a node missing
+  ``timeout_s`` of heartbeats is declared failed. In a multi-host run the
+  transport is the cluster coordinator; here the transport is injected so
+  tests simulate failures deterministically.
+* :class:`StragglerTracker` — EMA of per-step wall time with an outlier
+  rule (step > factor x EMA = straggler); the runner consults it to
+  re-dispatch or exclude nodes.
+* :class:`ElasticRunner` — the restart loop: run steps, checkpoint every
+  ``ckpt_every``, and on failure rebuild the mesh from surviving devices
+  and restore the latest checkpoint onto the NEW mesh (elastic re-shard,
+  see ``train.checkpoint``). Training resumes within one checkpoint
+  interval of the failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+
+class HeartbeatMonitor:
+    def __init__(self, node_ids: list[str], timeout_s: float = 60.0, clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        now = clock()
+        self._last: dict[str, float] = {n: now for n in node_ids}
+
+    def beat(self, node_id: str) -> None:
+        self._last[node_id] = self._clock()
+
+    def failed_nodes(self) -> list[str]:
+        now = self._clock()
+        return [n for n, t in self._last.items() if now - t > self.timeout_s]
+
+    def healthy_nodes(self) -> list[str]:
+        now = self._clock()
+        return [n for n, t in self._last.items() if now - t <= self.timeout_s]
+
+
+class StragglerTracker:
+    """EMA-based straggler detection over per-node step times."""
+
+    def __init__(self, factor: float = 2.0, alpha: float = 0.2):
+        self.factor = factor
+        self.alpha = alpha
+        self._ema: dict[str, float] = {}
+
+    def record(self, node_id: str, step_time_s: float) -> None:
+        prev = self._ema.get(node_id, step_time_s)
+        self._ema[node_id] = (1 - self.alpha) * prev + self.alpha * step_time_s
+
+    def fleet_median(self) -> float:
+        if not self._ema:
+            return 0.0
+        vals = sorted(self._ema.values())
+        return vals[len(vals) // 2]
+
+    def stragglers(self) -> list[str]:
+        med = self.fleet_median()
+        if med == 0.0:
+            return []
+        return [n for n, t in self._ema.items() if t > self.factor * med]
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    step: int
+    kind: str  # "node_lost" | "preemption" | "nan_loss"
+    detail: str = ""
+
+
+class ElasticRunner:
+    """Checkpoint/restart training loop with elastic mesh rebuilding.
+
+    ``make_state(mesh)`` builds (or restores) sharded train state for a
+    mesh; ``step_fn(state, batch) -> state, metrics`` runs one step;
+    ``mesh_factory(n_failures)`` returns the (possibly shrunken) mesh
+    after each failure. Failures are raised by ``failure_hook`` (tests) or
+    detected via non-finite loss.
+    """
+
+    def __init__(
+        self,
+        mesh_factory: Callable[[int], Any],
+        make_state: Callable[[Any], Any],
+        step_fn: Callable[[Any, Any], tuple[Any, dict]],
+        ckpt,
+        ckpt_every: int = 10,
+        failure_hook: Callable[[int], FailureEvent | None] | None = None,
+    ):
+        self.mesh_factory = mesh_factory
+        self.make_state = make_state
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.failure_hook = failure_hook
+        self.events: list[FailureEvent] = []
+        self.restarts = 0
+
+    def run(self, batches: list[Any], start_step: int = 0) -> tuple[Any, list[dict]]:
+        mesh = self.mesh_factory(self.restarts)
+        state = self.make_state(mesh)
+        latest = self.ckpt.latest_step()
+        step = start_step
+        if latest is not None:
+            step, state = self.ckpt.restore(state)
+            step += 1
+        metrics_log: list[dict] = []
+        i = step
+        while i < len(batches):
+            if self.failure_hook is not None:
+                ev = self.failure_hook(i)
+                if ev is not None:
+                    # Simulated node loss: rebuild mesh, restore, resume.
+                    self.events.append(ev)
+                    self.restarts += 1
+                    mesh = self.mesh_factory(self.restarts)
+                    state = self.make_state(mesh)
+                    latest = self.ckpt.latest_step()
+                    if latest is not None:
+                        resume, state = self.ckpt.restore(state)
+                        i = resume + 1
+                    else:
+                        i = 0
+                    continue
+            state, metrics = self.step_fn(state, batches[i])
+            loss = float(metrics.get("loss", 0.0))
+            if loss != loss:  # NaN — restore from last good checkpoint
+                self.events.append(FailureEvent(i, "nan_loss"))
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    raise RuntimeError("NaN loss before first checkpoint")
+                resume, state = self.ckpt.restore(state)
+                i = resume + 1
+                continue
+            metrics_log.append(dict(metrics, step=i))
+            if i % self.ckpt_every == 0:
+                self.ckpt.save_async(i, state)
+            i += 1
+        self.ckpt.wait()
+        return state, metrics_log

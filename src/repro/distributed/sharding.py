@@ -1,0 +1,208 @@
+"""Parameter/activation sharding rules (DP / FSDP / TP / EP).
+
+Specs are derived per-leaf from the parameter's *name* (right-aligned
+against the leaf shape so scan-stacking extra leading dims works
+transparently) with divisibility checks against the concrete mesh: a dim
+that does not divide by its axis size falls back to replication rather
+than failing to lower. This keeps one rule set valid across all 10
+architectures (40-head MLA, 12-head VLM, 4-head xLSTM, ...).
+
+Axis semantics:
+  dp   — batch data parallelism (('pod','data') on the multi-pod mesh)
+  fsdp — weight/optimizer sharding over the data axis (ZeRO-3 style)
+  tp   — tensor parallelism over the model axis; also hosts EP (experts)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    dp: tuple[str, ...] = ("data",)
+    fsdp: str | None = "data"
+    tp: str | None = "model"
+    ep: str | None = "model"
+    # Pure expert parallelism: shard expert weights ONLY over ep. The
+    # default additionally FSDPs the contracting d_model dim, which makes
+    # every expert einsum a partial-sum all-reduce of the (E, C, ff)
+    # dispatch tensor (EXPERIMENTS.md §Perf HC2).
+    moe_ep_only: bool = False
+
+
+TRAIN_RULES = ShardingRules()
+MULTIPOD_TRAIN_RULES = ShardingRules(dp=("pod", "data"))
+SERVE_RULES = ShardingRules(fsdp=None)
+MULTIPOD_SERVE_RULES = ShardingRules(dp=("pod", "data"), fsdp=None)
+# 2D tensor parallelism for tiny-batch serving (long-context decode with
+# global_batch=1 leaves the data axis idle — fold it into TP).
+SERVE_2D_RULES = ShardingRules(fsdp=None, tp=("model", "data"))
+MULTIPOD_SERVE_2D_RULES = ShardingRules(
+    dp=("pod",), fsdp=None, tp=("model", "data")
+)
+
+
+# Right-aligned axis-role specs per parameter name. Roles: 'fsdp', 'tp',
+# 'ep', None. Names not listed replicate.
+_BASE: dict[str, tuple] = {
+    # embeddings / heads
+    "embed": ("tp", "fsdp"),
+    "lm_head": ("fsdp", "tp"),
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # MLA
+    "w_dq": ("fsdp", "tp"),
+    "w_uq": ("fsdp", "tp"),
+    "w_dkv": ("fsdp", "tp"),
+    "w_uk": ("fsdp", "tp"),
+    "w_uv": ("fsdp", "tp"),
+    "w_kr": ("fsdp", None),
+    # FFN
+    "wi_gate": ("fsdp", "tp"),
+    "wi_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # router
+    "router": ("fsdp", None),
+    # RG-LRU
+    "w_gate_branch": ("fsdp", "tp"),
+    "w_main": ("fsdp", "tp"),
+    "w_input_gate": ("fsdp", "tp"),
+    "w_rec_gate": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "log_lambda": ("tp",),
+    # xLSTM
+    "w_up": ("fsdp", "tp"),
+    "w_up_gate": ("fsdp", "tp"),
+    "w_igate": ("fsdp", None),
+    "w_fgate": ("fsdp", None),
+    "w_gates": ("fsdp", "tp"),
+    "r_gates": (None, None, "tp"),
+    "skip_scale": ("tp",),
+}
+
+# Names whose leaves live under a 'moe' subtree get an extra leading expert
+# dim sharded over ep.
+_MOE_BASE: dict[str, tuple] = {
+    "wi_gate": ("ep", "fsdp", None),
+    "wi_up": ("ep", "fsdp", None),
+    "wo": ("ep", None, "fsdp"),
+}
+
+_MOE_BASE_EP_ONLY: dict[str, tuple] = {
+    "wi_gate": ("ep", None, None),
+    "wi_up": ("ep", None, None),
+    "wo": ("ep", None, None),
+}
+
+
+def _role_to_axis(role, rules: ShardingRules):
+    if role is None:
+        return None
+    return getattr(rules, role)
+
+
+def _resolve(roles: tuple, shape: tuple[int, ...], rules: ShardingRules, axis_sizes: dict[str, int]) -> P:
+    """Right-align roles against shape; drop non-dividing axes. Axis
+    entries may be tuples (multi-axis sharding, e.g. 2D TP for serving)."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    for i, role in enumerate(roles):
+        dim = ndim - len(roles) + i
+        if dim < 0:
+            continue
+        axis = _role_to_axis(role, rules)
+        if axis is None:
+            continue
+        parts = axis if isinstance(axis, tuple) else (axis,)
+        present = tuple(a for a in parts if a in axis_sizes)
+        if not present:
+            continue
+        size = 1
+        for a in present:
+            size *= axis_sizes[a]
+        if shape[dim] % size != 0:
+            continue
+        spec[dim] = present if len(present) > 1 else present[0]
+    return P(*spec)
+
+
+def partition_params(
+    params: Any, rules: ShardingRules, mesh: Mesh | None = None
+) -> Any:
+    """PartitionSpec tree for a parameter pytree (works on ShapeDtypeStructs)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+
+    def leaf_spec(path, leaf):
+        names = [
+            p.key for p in path if isinstance(p, jax.tree_util.DictKey)
+        ]
+        name = names[-1] if names else ""
+        in_moe = "moe" in names[:-1]
+        moe_table = _MOE_BASE_EP_ONLY if rules.moe_ep_only else _MOE_BASE
+        table = moe_table if (in_moe and name in moe_table) else _BASE
+        roles = table.get(name)
+        if roles is None:
+            return P()
+        return _resolve(roles, leaf.shape, rules, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_spec(rules: ShardingRules, extra_dims: int = 1) -> P:
+    """Spec for (B, ...) inputs: batch over dp axes, rest replicated."""
+    dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    return P(dp, *([None] * extra_dims))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints (no-ops without a mesh context).
+# ---------------------------------------------------------------------------
+
+def _current_axis_sizes() -> dict[str, int] | None:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def hint(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint that degrades to identity when axes are
+    absent from the active mesh or do not divide the dim."""
+    sizes = _current_axis_sizes()
+    if sizes is None:
+        return x
+    spec: list = []
+    for dim, a in enumerate(axes):
+        if a is None:
+            spec.append(None)
+            continue
+        parts = a if isinstance(a, tuple) else (a,)
+        present = tuple(p for p in parts if p in sizes)
+        total = 1
+        for p in present:
+            total *= sizes[p]
+        if present and x.shape[dim] % total == 0:
+            spec.append(present if len(present) > 1 else present[0])
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

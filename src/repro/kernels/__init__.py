@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- grid_quantize: the FPGA IP core (spatial quantization), VPU tiles.
+- cluster_accum: beyond-paper fused quantize+aggregate (paper Sec. VI).
+- window_entropy: per-cluster metric windows, frame VMEM-resident.
+
+ops.py holds jit'd public wrappers; ref.py the pure-jnp oracles.
+"""

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the paper's grid-quantization IP core (Fig. 4).
+
+The FPGA core is a 3-stage II=1 stream pipeline at 200 MHz: unpack a
+32-bit AXI word (x = bits 15:0, y = bits 31:16), divide both coordinates
+by ``cell_size``, repack. TPU adaptation (DESIGN.md Sec. 2): the stream
+becomes VMEM tiles of packed words processed 8x128 lanes at a time on the
+VPU; the DSP48 division becomes a logical shift for power-of-two cell
+sizes (the shipped configuration: 16) and an integer division otherwise.
+
+Wire format is bit-identical to the paper's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-native tile: 8 sublanes x 128 lanes of 32-bit words.
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+
+
+def _quantize_block(words: jax.Array, cell_size: int) -> jax.Array:
+    w = words.astype(jnp.uint32)
+    x = w & jnp.uint32(0xFFFF)
+    y = w >> jnp.uint32(16)
+    if cell_size & (cell_size - 1) == 0:
+        shift = jnp.uint32(cell_size.bit_length() - 1)
+        cx = x >> shift
+        cy = y >> shift
+    else:
+        cx = (x // jnp.uint32(cell_size)).astype(jnp.uint32)
+        cy = (y // jnp.uint32(cell_size)).astype(jnp.uint32)
+    return (cy << jnp.uint32(16)) | cx
+
+
+def _kernel(words_ref, out_ref, *, cell_size: int):
+    out_ref[...] = _quantize_block(words_ref[...], cell_size)
+
+
+def grid_quantize_packed(
+    words: jax.Array,
+    cell_size: int = 16,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantize a 2D array of packed 32-bit event words.
+
+    ``words``: (R, 128) uint32 with R a multiple of 8 (``ops.py`` pads
+    arbitrary 1-D streams into this layout). Returns packed cell words of
+    the same shape/dtype.
+    """
+    if words.ndim != 2 or words.shape[1] != BLOCK_COLS:
+        raise ValueError(f"expected (R, {BLOCK_COLS}) layout, got {words.shape}")
+    rows = words.shape[0]
+    if rows % BLOCK_ROWS:
+        raise ValueError(f"rows ({rows}) must be a multiple of {BLOCK_ROWS}")
+    grid = (rows // BLOCK_ROWS,)
+    return pl.pallas_call(
+        lambda w, o: _kernel(w, o, cell_size=cell_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(words.shape, jnp.uint32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,93 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles stream padding/layout so callers pass natural 1-D event arrays,
+and selects interpret mode automatically: compiled on TPU, interpreted
+(kernel body executed in Python by the Pallas interpreter) on CPU so the
+same code path is testable everywhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cluster_accum as _ca
+from repro.kernels import grid_quantize as _gq
+from repro.kernels import window_entropy as _we
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: jax.Array, n: int, fill=0) -> jax.Array:
+    pad = n - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.full((pad,), fill, a.dtype)])
+
+
+@partial(jax.jit, static_argnames=("cell_size", "interpret"))
+def grid_quantize_packed(
+    words: jax.Array, cell_size: int = 16, interpret: bool | None = None
+) -> jax.Array:
+    """Quantize a 1-D stream of packed 32-bit event words (paper IP core).
+
+    Pads to the kernel's (8, 128) tile, runs the Pallas kernel, and returns
+    the first N packed cell words.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    n = words.shape[0]
+    tile = _gq.BLOCK_ROWS * _gq.BLOCK_COLS
+    n_pad = -(-n // tile) * tile
+    padded = _pad_to(words.astype(jnp.uint32), n_pad)
+    out = _gq.grid_quantize_packed(
+        padded.reshape(-1, _gq.BLOCK_COLS), cell_size, interpret=interpret
+    )
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("cell_size", "grid_w", "grid_h", "interpret"))
+def cluster_accum(
+    x: jax.Array,
+    y: jax.Array,
+    t: jax.Array,
+    valid: jax.Array,
+    *,
+    cell_size: int,
+    grid_w: int,
+    grid_h: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused quantize + per-cell count/centroid accumulation."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n = x.shape[0]
+    n_pad = -(-n // _ca.EVENT_TILE) * _ca.EVENT_TILE
+    return _ca.cluster_accum(
+        _pad_to(x.astype(jnp.int32), n_pad),
+        _pad_to(y.astype(jnp.int32), n_pad),
+        _pad_to(t.astype(jnp.float32), n_pad),
+        _pad_to(valid.astype(jnp.float32), n_pad),
+        cell_size=cell_size,
+        grid_w=grid_w,
+        grid_h=grid_h,
+        interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("window", "bins", "interpret"))
+def window_entropy(
+    frame: jax.Array,
+    cx: jax.Array,
+    cy: jax.Array,
+    *,
+    window: int = 48,
+    bins: int = 32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-cluster (3, K) [shannon, renyi, contrast] window metrics."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _we.window_entropy(
+        frame, cx, cy, window=window, bins=bins, interpret=interpret
+    )

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors the corresponding kernel's contract exactly; tests
+sweep shapes/dtypes and assert allclose between kernel (interpret=True on
+CPU) and these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grid_quantize_packed_ref(words: jax.Array, cell_size: int = 16) -> jax.Array:
+    """Oracle for kernels.grid_quantize.grid_quantize_packed."""
+    w = words.astype(jnp.uint32)
+    x = w & jnp.uint32(0xFFFF)
+    y = w >> jnp.uint32(16)
+    cx = x // jnp.uint32(cell_size)
+    cy = y // jnp.uint32(cell_size)
+    return (cy << jnp.uint32(16)) | cx
+
+
+def cluster_accum_ref(
+    x: jax.Array,
+    y: jax.Array,
+    t: jax.Array,
+    valid: jax.Array,
+    *,
+    cell_size: int,
+    grid_w: int,
+    grid_h: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.cluster_accum.cluster_accum."""
+    n_cells = grid_w * grid_h
+    cx = x.astype(jnp.int32) // cell_size
+    cy = y.astype(jnp.int32) // cell_size
+    flat = jnp.clip(cy * grid_w + cx, 0, n_cells - 1)
+    v = valid.astype(jnp.float32)
+    vi = valid.astype(jnp.int32)
+    count = jnp.zeros((n_cells,), jnp.int32).at[flat].add(vi)
+    sum_x = jnp.zeros((n_cells,), jnp.float32).at[flat].add(v * x.astype(jnp.float32))
+    sum_y = jnp.zeros((n_cells,), jnp.float32).at[flat].add(v * y.astype(jnp.float32))
+    sum_t = jnp.zeros((n_cells,), jnp.float32).at[flat].add(v * t.astype(jnp.float32))
+    return count, sum_x, sum_y, sum_t
+
+
+def window_entropy_ref(
+    frame: jax.Array,
+    cx: jax.Array,
+    cy: jax.Array,
+    *,
+    window: int = 48,
+    bins: int = 32,
+) -> jax.Array:
+    """Oracle for kernels.window_entropy.window_entropy. Returns (3, K)."""
+    h, w = frame.shape
+
+    def one(cx_i, cy_i):
+        x0 = jnp.clip(cx_i - window // 2, 0, w - window)
+        y0 = jnp.clip(cy_i - window // 2, 0, h - window)
+        patch = jax.lax.dynamic_slice(frame, (y0, x0), (window, window))
+        flat = patch.reshape(-1)
+        idx = jnp.clip((flat * bins).astype(jnp.int32), 0, bins - 1)
+        counts = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+        p = counts / jnp.maximum(counts.sum(), 1.0)
+        shannon = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0))
+        renyi = -jnp.log2(jnp.maximum(jnp.sum(p * p), 1e-12))
+        contrast = jnp.std(flat)
+        return jnp.stack([shannon, renyi, contrast])
+
+    return jax.vmap(one)(cx.astype(jnp.int32), cy.astype(jnp.int32)).T

@@ -1,0 +1,79 @@
+"""Pallas kernel for per-cluster window entropy metrics (paper Sec. III-E).
+
+For each detected cluster the paper computes intensity-histogram statistics
+over a 48x48 window of the reconstructed frame. With hundreds of clusters
+per second this is the metric hot-spot; here one kernel invocation scans
+all K cluster windows with the frame resident in VMEM (a 640x480 f32 frame
+is 1.2 MB — comfortably VMEM-resident), computing:
+
+  row 0: Shannon entropy  H  = -sum p log2 p
+  row 1: Renyi entropy    H2 = -log2 sum p^2
+  row 2: local contrast   std(window)
+
+Histogramming is one-hot bin assignment followed by a reduction — the same
+MXU-friendly scatter-as-matmul trick as ``cluster_accum``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WINDOW = 48
+HIST_BINS = 32
+
+
+def _kernel(cx_ref, cy_ref, frame_ref, out_ref, *, window: int, bins: int):
+    k = pl.program_id(0)
+    cx = cx_ref[0, k]
+    cy = cy_ref[0, k]
+    h, w = frame_ref.shape
+    x0 = jnp.clip(cx - window // 2, 0, w - window)
+    y0 = jnp.clip(cy - window // 2, 0, h - window)
+    patch = jax.lax.dynamic_slice(frame_ref[...], (y0, x0), (window, window))
+
+    flat = patch.reshape(1, window * window)
+    idx = jnp.clip((flat * bins).astype(jnp.int32), 0, bins - 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (window * window, bins), 1)
+    onehot = (idx.reshape(window * window, 1) == iota).astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)  # (bins,)
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    shannon = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0))
+    renyi = -jnp.log2(jnp.maximum(jnp.sum(p * p), 1e-12))
+    contrast = jnp.std(flat)
+    out_ref[0, 0] = shannon
+    out_ref[1, 0] = renyi
+    out_ref[2, 0] = contrast
+
+
+def window_entropy(
+    frame: jax.Array,
+    cx: jax.Array,
+    cy: jax.Array,
+    *,
+    window: int = WINDOW,
+    bins: int = HIST_BINS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compute (3, K) [shannon, renyi, contrast] for K cluster windows.
+
+    ``frame``: (H, W) float32 in [0, 1]; ``cx``/``cy``: (K,) int32 centers.
+    """
+    k = cx.shape[0]
+    h, w = frame.shape
+    return pl.pallas_call(
+        lambda cxr, cyr, fr, o: _kernel(cxr, cyr, fr, o, window=window, bins=bins),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((3, k), jnp.float32),
+        interpret=interpret,
+    )(
+        cx.astype(jnp.int32).reshape(1, k),
+        cy.astype(jnp.int32).reshape(1, k),
+        frame.astype(jnp.float32),
+    )

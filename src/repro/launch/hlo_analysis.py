@@ -1,0 +1,559 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 16 transformer cycles reports 1/16th of the real FLOPs,
+and collectives inside the loop body vanish from the totals. This module
+parses the optimized (post-SPMD) HLO text and aggregates:
+
+* flops — dot ops: 2 * |result| * contracted-dim product,
+* bytes — per top-level instruction: result + operand bytes, with
+  slice-aware fusion accounting (a fusion parameter consumed only by a
+  (dynamic-)slice counts the slice, not the whole buffer — this is the
+  scan param-slice pattern),
+* collective payload bytes per kind (ring-cost approximations:
+  all-gather/all-reduce count gathered/2x bytes, others operand bytes),
+
+each multiplied by the enclosing ``while`` trip count, which XLA exposes
+as ``backend_config={"known_trip_count":{"n":...}}``.
+
+Shapes in post-SPMD HLO are per-device, so all totals are PER-DEVICE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s*"
+    r"([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shape(s: str) -> list[tuple[str, list[int]]]:
+    """'(f32[2,3]{1,0}, s32[])' or 'f32[16,128]{1,0}' -> [(dtype, dims)]."""
+    return [
+        (dt, [int(d) for d in dims.split(",") if d])
+        for dt, dims in _SHAPE_RE.findall(s)
+    ]
+
+
+def _shape_bytes(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_elems(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: list  # [(dtype, dims)]
+    opcode: str
+    line: str
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list
+    is_entry: bool = False
+
+    def __post_init__(self):
+        self.by_name = {i.name: i for i in self.instructions}
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = Computation(cur.name, cur.instructions, cur.is_entry)
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode = m.group(1), m.group(2), m.group(3)
+        paren = line[m.end() - 1:]
+        # operands = refs inside the first (...) group
+        depth = 0
+        args = ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        cur.instructions.append(
+            Instruction(name, _parse_shape(shape_str), opcode, line,
+                        _OPERAND_RE.findall(args))
+        )
+    return comps
+
+
+def _trip_count(line: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+    return int(m.group(1)) if m else 1
+
+
+def _attr_comp(line: str, attr: str) -> str | None:
+    m = re.search(rf"{attr}=%?([\w\.\-]+)", line)
+    return m.group(1) if m else None
+
+
+_FLOAT_EMUL = {"f32", "bf16", "f16"}
+
+
+def _is_free_convert(inst: Instruction, comp: "Computation") -> bool:
+    """True for float<->float converts XLA:CPU inserts to emulate bf16
+    (its float-normalization pass). These do not exist on the TPU target
+    (native bf16), so they are costed at zero; see module docstring."""
+    if inst.opcode != "convert" or not inst.shape:
+        return False
+    out_dt, out_dims = inst.shape[0]
+    if out_dt not in _FLOAT_EMUL:
+        return False
+    src = comp.by_name.get(inst.operands[0]) if inst.operands else None
+    if src is None or not src.shape:
+        return False
+    in_dt, in_dims = src.shape[0]
+    return in_dt in _FLOAT_EMUL and in_dims == out_dims
+
+
+def _resolve_through_converts(comp: "Computation", inst: Instruction) -> Instruction:
+    """Follow a chain of same-shape float converts back to its source."""
+    seen = 0
+    while inst.opcode == "convert" and inst.operands and seen < 8:
+        src = comp.by_name.get(inst.operands[0])
+        if src is None:
+            break
+        inst = src
+        seen += 1
+    return inst
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict | None = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        self._memo: dict[str, Cost] = {}
+
+    # -- shape resolution ---------------------------------------------------
+
+    def _operand_shapes(self, comp: Computation, inst: Instruction):
+        out = []
+        for op in inst.operands:
+            d = comp.by_name.get(op)
+            if d is not None:
+                out.append(d.shape)
+        return out
+
+    # -- per-instruction costs ----------------------------------------------
+
+    def _dot_flops(self, comp: Computation, inst: Instruction) -> float:
+        result_elems = _shape_elems(inst.shape)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+        cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+        lhs = comp.by_name.get(inst.operands[0]) if inst.operands else None
+        k = 1
+        if lhs is not None and lhs.shape:
+            dims = lhs.shape[0][1]
+            for c in cdims:
+                if c < len(dims):
+                    k *= dims[c]
+        return 2.0 * result_elems * k
+
+    def _conv_flops(self, comp: Computation, inst: Instruction) -> float:
+        # flops = 2 * |result| * (kernel spatial x in_features)
+        result_elems = _shape_elems(inst.shape)
+        rhs = comp.by_name.get(inst.operands[1]) if len(inst.operands) > 1 else None
+        k = 1
+        if rhs is not None and rhs.shape:
+            for d in rhs.shape[0][1][:-1]:  # all but output-feature dim
+                k *= d
+        return 2.0 * result_elems * k
+
+    def _fusion_operand_bytes(self, comp: Computation, inst: Instruction) -> float:
+        """Slice-aware: params only consumed by (dynamic-)slice count the
+        slice result size, not the whole buffer."""
+        callee_name = _attr_comp(inst.line, "calls")
+        callee = self.comps.get(callee_name) if callee_name else None
+        total = 0.0
+        op_shapes = []
+        for op in inst.operands:
+            d = comp.by_name.get(op)
+            op_shapes.append(d.shape if d else None)
+        if callee is None:
+            for s in op_shapes:
+                if s:
+                    total += _shape_bytes(s)
+            return total
+        # map param index -> param instruction name
+        params: dict[int, Instruction] = {}
+        for i in callee.instructions:
+            if i.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i.line)
+                if m:
+                    params[int(m.group(1))] = i
+        for idx, op in enumerate(inst.operands):
+            shape = op_shapes[idx]
+            if shape is None:
+                continue
+            pinst = params.get(idx)
+            eff = _shape_bytes(shape)
+            if pinst is not None:
+                # Look through emulation converts to the real consumers.
+                frontier = [pinst.name]
+                uses: list[Instruction] = []
+                for _ in range(8):
+                    new_frontier = []
+                    for u in callee.instructions:
+                        if u.opcode == "parameter" or not u.operands:
+                            continue
+                        if any(f in u.operands for f in frontier):
+                            if _is_free_convert(u, callee):
+                                new_frontier.append(u.name)
+                            else:
+                                uses.append(u)
+                    if not new_frontier:
+                        break
+                    frontier = new_frontier
+                if uses and all(
+                    u.opcode in ("dynamic-slice", "slice")
+                    for u in uses
+                ):
+                    eff = sum(_shape_bytes(u.shape) for u in uses)
+                elif uses and all(
+                    u.opcode == "dynamic-update-slice" for u in uses
+                ):
+                    # In-place update: traffic = the written region only.
+                    eff = 0.0
+                    for u in uses:
+                        upd = callee.by_name.get(u.operands[1]) if len(u.operands) > 1 else None
+                        if upd is not None:
+                            upd = _resolve_through_converts(callee, upd)
+                        eff += _shape_bytes(upd.shape) if upd else _shape_bytes(u.shape)
+            total += eff
+        return total
+
+    def _fusion_result_bytes(self, inst: Instruction) -> float:
+        """If the fusion root is a dynamic-update-slice (in-place buffer
+        write), effective output traffic is the update region, not the
+        whole buffer. Emulation converts around the root are skipped."""
+        callee_name = _attr_comp(inst.line, "calls")
+        callee = self.comps.get(callee_name) if callee_name else None
+        if callee is not None and callee.instructions:
+            root = _resolve_through_converts(callee, callee.instructions[-1])
+            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+                upd = callee.by_name.get(root.operands[1])
+                if upd is not None:
+                    upd = _resolve_through_converts(callee, upd)
+                    return _shape_bytes(upd.shape)
+                return _shape_bytes(root.shape)
+        return _shape_bytes(inst.shape)
+
+    # -- computation cost ----------------------------------------------------
+
+    def cost(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        self._memo[comp_name] = total  # break cycles defensively
+        if comp is None:
+            return total
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all"):
+                continue
+            base_kind = op[:-6] if op.endswith("-start") else op
+            if base_kind.endswith("-done"):
+                continue
+            if base_kind in COLLECTIVES:
+                if base_kind == "all-gather":
+                    payload = _shape_bytes(inst.shape)
+                elif base_kind == "all-reduce":
+                    payload = 2.0 * _shape_bytes(inst.shape)
+                else:
+                    ops = self._operand_shapes(comp, inst)
+                    payload = sum(_shape_bytes(s) for s in ops) or _shape_bytes(inst.shape)
+                total.coll[base_kind] = total.coll.get(base_kind, 0.0) + payload
+                total.bytes += _shape_bytes(inst.shape)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(comp, inst)
+                total.bytes += _shape_bytes(inst.shape) + sum(
+                    _shape_bytes(s) for s in self._operand_shapes(comp, inst)
+                )
+                continue
+            if op == "convolution":
+                total.flops += self._conv_flops(comp, inst)
+                total.bytes += _shape_bytes(inst.shape) + sum(
+                    _shape_bytes(s) for s in self._operand_shapes(comp, inst)
+                )
+                continue
+            if op == "convert" and _is_free_convert(inst, comp):
+                continue  # XLA:CPU bf16-emulation artifact, free on TPU
+            if op in ("dynamic-slice", "slice"):
+                total.bytes += 2.0 * _shape_bytes(inst.shape)
+                continue
+            if op == "dynamic-update-slice":
+                upd = comp.by_name.get(inst.operands[1]) if len(inst.operands) > 1 else None
+                total.bytes += 2.0 * (_shape_bytes(upd.shape) if upd else _shape_bytes(inst.shape))
+                continue
+            if op == "fusion":
+                callee = _attr_comp(inst.line, "calls")
+                if callee:
+                    child = self.cost(callee)
+                    total.flops += child.flops  # dots inside fusions
+                    for k, v in child.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                total.bytes += self._fusion_result_bytes(inst) + self._fusion_operand_bytes(comp, inst)
+                continue
+            if op == "while":
+                body = _attr_comp(inst.line, "body")
+                cond = _attr_comp(inst.line, "condition")
+                trip = _trip_count(inst.line)
+                if body:
+                    total.add(self.cost(body), trip)
+                if cond:
+                    total.add(self.cost(cond), trip)
+                continue
+            if op in ("call", "async-start"):
+                callee = _attr_comp(inst.line, "to_apply") or _attr_comp(inst.line, "calls")
+                if callee:
+                    total.add(self.cost(callee), 1.0)
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)([^,}]+)", inst.line):
+                    total.add(self.cost(m.group(1).strip("% ")), 1.0)
+                continue
+            # generic elementwise / data movement: bytes only
+            total.bytes += _shape_bytes(inst.shape) + sum(
+                _shape_bytes(s) for s in self._operand_shapes(comp, inst)
+            )
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        for name, comp in self.comps.items():
+            if comp.is_entry:
+                return self.cost(name)
+        raise ValueError("no ENTRY computation found")
+
+
+def analyze(hlo_text: str) -> dict:
+    """Per-device {flops, bytes, coll_bytes, coll_breakdown} for a module."""
+    c = Analyzer(hlo_text).entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "coll_bytes": float(sum(c.coll.values())),
+        "coll_breakdown": {k: float(v) for k, v in sorted(c.coll.items())},
+    }
+
+
+def top_collectives(hlo_text: str, n: int = 20) -> list[dict]:
+    """The N largest collective ops (payload x trips), with op metadata —
+    the profiler view for collective-bound hillclimbing."""
+    an = Analyzer(hlo_text)
+    entry = next(c for c in an.comps.values() if c.is_entry)
+
+    # trip multiplier per computation (map comp -> product of enclosing trips)
+    mult: dict[str, float] = {entry.name: 1.0}
+    stack = [entry.name]
+    while stack:
+        name = stack.pop()
+        comp = an.comps.get(name)
+        if comp is None:
+            continue
+        for inst in comp.instructions:
+            for attr, factor in (("calls", 1.0), ("body", None), ("condition", None), ("to_apply", 1.0)):
+                callee = _attr_comp(inst.line, attr)
+                if not callee or callee not in an.comps:
+                    continue
+                f = _trip_count(inst.line) if factor is None else factor
+                m = mult.get(name, 1.0) * f
+                if mult.get(callee, 0.0) < m:
+                    mult[callee] = m
+                    stack.append(callee)
+
+    out = []
+    for cname, comp in an.comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for inst in comp.instructions:
+            kind = inst.opcode[:-6] if inst.opcode.endswith("-start") else inst.opcode
+            if kind not in COLLECTIVES:
+                continue
+            payload = _shape_bytes(inst.shape)
+            meta = re.search(r'op_name="([^"]*)"', inst.line)
+            out.append({
+                "kind": kind,
+                "bytes": payload * m,
+                "trips": m,
+                "shape": inst.line.split(" ", 3)[2] if len(inst.line.split(" ", 3)) > 2 else "",
+                "op_name": meta.group(1) if meta else "",
+            })
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:n]
+
+
+def _mult_map(an: "Analyzer") -> dict[str, float]:
+    entry = next(c for c in an.comps.values() if c.is_entry)
+    mult: dict[str, float] = {entry.name: 1.0}
+    stack = [entry.name]
+    while stack:
+        name = stack.pop()
+        comp = an.comps.get(name)
+        if comp is None:
+            continue
+        for inst in comp.instructions:
+            for attr in ("calls", "body", "condition", "to_apply"):
+                callee = _attr_comp(inst.line, attr)
+                if not callee or callee not in an.comps:
+                    continue
+                f = _trip_count(inst.line) if attr in ("body", "condition") else 1.0
+                m = mult.get(name, 1.0) * f
+                if mult.get(callee, 0.0) < m:
+                    mult[callee] = m
+                    stack.append(callee)
+    return mult
+
+
+def top_bytes(hlo_text: str, n: int = 20) -> list[dict]:
+    """The N largest byte-moving instructions (bytes x trips) — the
+    profiler view for memory-bound hillclimbing."""
+    an = Analyzer(hlo_text)
+    mult = _mult_map(an)
+    out = []
+    for cname, comp in an.comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "while", "call"):
+                continue
+            if op == "convert" and _is_free_convert(inst, comp):
+                continue
+            if op == "fusion":
+                b = an._fusion_result_bytes(inst) + an._fusion_operand_bytes(comp, inst)
+            elif op in ("dynamic-slice", "slice"):
+                b = 2.0 * _shape_bytes(inst.shape)
+            elif op == "dynamic-update-slice":
+                upd = comp.by_name.get(inst.operands[1]) if len(inst.operands) > 1 else None
+                b = 2.0 * (_shape_bytes(upd.shape) if upd else _shape_bytes(inst.shape))
+            else:
+                b = _shape_bytes(inst.shape) + sum(
+                    _shape_bytes(s) for s in an._operand_shapes(comp, inst)
+                )
+            meta = re.search(r'op_name="([^"]*)"', inst.line)
+            out.append({
+                "bytes": b * m,
+                "trips": m,
+                "opcode": op,
+                "op_name": meta.group(1) if meta else inst.name,
+            })
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:n]
+
+
+def top_dots(hlo_text: str, n: int = 20) -> list[dict]:
+    """The N largest matmuls (flops x trips) with metadata."""
+    an = Analyzer(hlo_text)
+    entry = next(c for c in an.comps.values() if c.is_entry)
+    mult: dict[str, float] = {entry.name: 1.0}
+    stack = [entry.name]
+    while stack:
+        name = stack.pop()
+        comp = an.comps.get(name)
+        if comp is None:
+            continue
+        for inst in comp.instructions:
+            for attr in ("calls", "body", "condition", "to_apply"):
+                callee = _attr_comp(inst.line, attr)
+                if not callee or callee not in an.comps:
+                    continue
+                f = _trip_count(inst.line) if attr in ("body", "condition") else 1.0
+                m = mult.get(name, 1.0) * f
+                if mult.get(callee, 0.0) < m:
+                    mult[callee] = m
+                    stack.append(callee)
+    out = []
+    for cname, comp in an.comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for inst in comp.instructions:
+            if inst.opcode != "dot":
+                continue
+            fl = an._dot_flops(comp, inst)
+            meta = re.search(r'op_name="([^"]*)"', inst.line)
+            out.append({
+                "flops": fl * m,
+                "trips": m,
+                "op_name": meta.group(1) if meta else "",
+            })
+    out.sort(key=lambda d: -d["flops"])
+    return out[:n]

@@ -1,0 +1,13 @@
+"""Assigned-architecture model zoo: decoder-only LM families in pure JAX.
+
+Families: dense GQA transformers, MLA (MiniCPM3), MoE (token-choice top-k
+with capacity), audio/VLM backbones with stubbed modality frontends,
+RG-LRU hybrid (RecurrentGemma), and xLSTM (mLSTM/sLSTM).
+"""
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    forward_train,
+    prefill,
+    decode_step,
+    init_cache,
+)

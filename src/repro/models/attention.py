@@ -1,0 +1,452 @@
+"""GQA attention with chunked online-softmax (flash-style) computation.
+
+XLA does not rewrite softmax(QK^T)V into a streaming kernel on its own; at
+32k context a materialized score tensor is petabytes. ``flash_attention``
+is the pure-JAX flash algorithm: an outer scan over query chunks and an
+inner scan over KV chunks carrying (m, l, acc) online-softmax state. Peak
+live memory per step is (B, KV, G, q_chunk, kv_chunk) — constants, not
+O(S^2).
+
+Supports: causal masking via absolute positions, sliding-window (local)
+attention, GQA grouping (KV heads x group), dk != dv (for MLA), and cache
+validity masks (position < 0 = empty slot).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+# Default flash chunk sizes. The inner-scan (m, l, acc) carries cross HBM
+# once per KV step, so accumulator traffic scales with S/kv_chunk; larger
+# chunks trade VMEM-resident score-tile size for fewer carry round trips
+# (EXPERIMENTS.md §Perf HC4). Overridable per dry-run variant.
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, KV, G, dk)
+    k: jax.Array,  # (B, Skv, KV, dk)
+    v: jax.Array,  # (B, Skv, KV, dv)
+    q_positions: jax.Array,  # (Sq,) int32 absolute positions
+    kv_positions: jax.Array,  # (Skv,) int32; -1 marks invalid slots
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> jax.Array:
+    q_chunk = Q_CHUNK if q_chunk is None else q_chunk
+    kv_chunk = KV_CHUNK if kv_chunk is None else kv_chunk
+    b, sq, kvh, g, dk = q.shape
+    skv, dv = k.shape[1], v.shape[-1]
+    scale = dk ** -0.5
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # Pad sequence axes to chunk multiples.
+    sq_p = -(-sq // q_chunk) * q_chunk
+    skv_p = -(-skv // kv_chunk) * kv_chunk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, sq_p - sq), constant_values=0)
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, skv_p - skv), constant_values=-1)
+
+    nq, nkv = sq_p // q_chunk, skv_p // kv_chunk
+    # (nq, B, qc, KV, G, dk) so scan slices are contiguous.
+    qs = q.reshape(b, nq, q_chunk, kvh, g, dk).transpose(1, 0, 2, 3, 4, 5)
+    qpos = q_positions.reshape(nq, q_chunk)
+
+    def q_step(_, q_in):
+        qc, qp = q_in  # (B, qc, KV, G, dk), (qc,)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, j * kv_chunk, kv_chunk)
+            # scores: (B, KV, G, qc, kc)
+            s = jnp.einsum(
+                "bqkgd,btkd->bkgqt", qc, ks, preferred_element_type=jnp.float32
+            ) * scale
+            mask = kp[None, :] >= 0  # valid slots
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= kp[None, :] > qp[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vs.dtype), vs,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+            jnp.zeros((b, kvh, g, q_chunk, dv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, qc, dv)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, dv)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qpos))  # (nq, B, qc, KV, G, dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, kvh, g, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# When True, decode QK/PV dots run in the cache dtype and upcast AFTER the
+# dot. ``preferred_element_type=f32`` on a bf16 cache makes XLA hoist an
+# f32 COPY of the whole cache into the decode loop carry (measured ~900
+# GB/step on deepseek-67b — EXPERIMENTS.md §Perf HC1). On TPU the MXU
+# accumulates bf16 dots in f32 internally either way.
+CACHE_DTYPE_DOTS = False
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, KV, G, dk)
+    k: jax.Array,  # (B, Skv, KV, dk)
+    v: jax.Array,  # (B, Skv, KV, dv)
+    position: jax.Array,  # scalar int32: absolute position of the new token
+    kv_positions: jax.Array,  # (Skv,)
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention over a cache — no chunking needed (Sq = 1)."""
+    dk = q.shape[-1]
+    if CACHE_DTYPE_DOTS:
+        s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(k.dtype), k)
+        s = s.astype(jnp.float32) * (dk ** -0.5)
+    else:
+        s = jnp.einsum(
+            "bqkgd,btkd->bkgqt", q, k, preferred_element_type=jnp.float32
+        ) * (dk ** -0.5)
+    mask = (kv_positions >= 0) & (kv_positions <= position)
+    if window is not None:
+        mask &= kv_positions > position - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if CACHE_DTYPE_DOTS:
+        out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    else:
+        out = jnp.einsum(
+            "bkgqt,btkd->bqkgd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (init/apply for train, prefill, decode).
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim),
+        "wo": dense_init(k4, n_heads * head_dim, d_model),
+    }
+
+
+def _project_qkv(params: Params, x: jax.Array, n_heads: int, n_kv_heads: int, head_dim: int):
+    b, s, _ = x.shape
+    dtype = x.dtype
+    q = (x @ params["wq"].astype(dtype)).reshape(b, s, n_heads, head_dim)
+    k = (x @ params["wk"].astype(dtype)).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ params["wv"].astype(dtype)).reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _apply_positional(q, k, positions, cfg_pos: dict[str, Any]):
+    kind = cfg_pos.get("kind", "rope")
+    if kind == "rope":
+        theta = cfg_pos.get("theta", 10000.0)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    elif kind == "mrope":
+        q = apply_mrope(q, cfg_pos["mrope_positions"], cfg_pos["sections"], cfg_pos.get("theta", 10000.0))
+        k = apply_mrope(k, cfg_pos["mrope_positions"], cfg_pos["sections"], cfg_pos.get("theta", 10000.0))
+    elif kind == "none":
+        pass
+    else:
+        raise ValueError(kind)
+    return q, k
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,  # (B, S) absolute
+    pos_cfg: dict[str, Any],
+    window: int | None = None,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> jax.Array:
+    """Full causal (optionally banded) attention for train/prefill."""
+    b, s, _ = x.shape
+    g = n_heads // n_kv_heads
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    q, k = _apply_positional(q, k, positions, pos_cfg)
+    qg = q.reshape(b, s, n_kv_heads, g, head_dim)
+    out = flash_attention(
+        qg, k, v,
+        q_positions=positions[0],
+        kv_positions=positions[0],
+        causal=True,
+        window=window,
+        q_chunk=q_chunk,
+        kv_chunk=kv_chunk,
+    )
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attention_prefill(
+    params: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,
+    pos_cfg: dict[str, Any],
+    window: int | None = None,
+    cache_len: int | None = None,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Forward + build the decode cache.
+
+    For full attention the cache holds all S (padded to cache_len) keys;
+    for local attention only the trailing ``window`` ring buffer.
+    """
+    b, s, _ = x.shape
+    g = n_heads // n_kv_heads
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    q, k = _apply_positional(q, k, positions, pos_cfg)
+    qg = q.reshape(b, s, n_kv_heads, g, head_dim)
+    out = flash_attention(
+        qg, k, v,
+        q_positions=positions[0],
+        kv_positions=positions[0],
+        causal=True,
+        window=window,
+        q_chunk=q_chunk,
+        kv_chunk=kv_chunk,
+    )
+    out = out.reshape(b, s, n_heads * head_dim) @ params["wo"].astype(x.dtype)
+
+    if window is None:
+        clen = cache_len if cache_len is not None else s
+        pad = clen - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(positions[0], (0, pad), constant_values=-1)
+        cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        w = window
+        # Ring buffer holding the last `w` tokens at slot = pos % w.
+        take = min(s, w)
+        k_last = k[:, s - take:]
+        v_last = v[:, s - take:]
+        p_last = positions[0, s - take:]
+        slots = p_last % w
+        ck = jnp.zeros((b, w, n_kv_heads, head_dim), k.dtype).at[:, slots].set(k_last)
+        cv = jnp.zeros((b, w, n_kv_heads, head_dim), v.dtype).at[:, slots].set(v_last)
+        cpos = jnp.full((w,), -1, jnp.int32).at[slots].set(p_last)
+        cache = {"k": ck, "v": cv, "pos": cpos}
+    return out, cache
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: dict[str, jax.Array],
+    position: jax.Array,  # scalar int32
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    pos_cfg: dict[str, Any],
+    window: int | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    b = x.shape[0]
+    g = n_heads // n_kv_heads
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos_b = jnp.broadcast_to(position[None], (b, 1)).astype(jnp.int32)
+    q, k = _apply_positional(q, k, pos_b, pos_cfg)
+    slot = position % cache["k"].shape[1] if window is not None else position
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], position[None].astype(jnp.int32), slot, axis=0
+    )
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim)
+    out = decode_attention(qg, ck, cv, position, cpos, window=window)
+    out = out.reshape(b, 1, n_heads * head_dim) @ params["wo"].astype(x.dtype)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def init_attn_cache(
+    b: int, cache_len: int, n_kv_heads: int, head_dim: int, dtype,
+    window: int | None = None, page: int = 0,
+) -> dict[str, jax.Array]:
+    clen = min(cache_len, window) if window is not None else cache_len
+    out = {
+        "k": jnp.zeros((b, clen, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((b, clen, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((clen,), -1, jnp.int32),
+    }
+    if page:
+        out["k_page"] = jnp.zeros((b, page, n_kv_heads, head_dim), dtype)
+        out["v_page"] = jnp.zeros((b, page, n_kv_heads, head_dim), dtype)
+        out["page_pos"] = jnp.full((page,), -1, jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: hot-page writes + two-source online-softmax merge.
+#
+# With the main cache sequence-sharded (context parallelism), a one-token
+# dynamic update lowers under SPMD to a masked select that rewrites the
+# whole local cache shard every step (~83 GB/step on deepseek-67b,
+# EXPERIMENTS.md §Perf HC1). Instead, new tokens land in a small
+# batch-sharded ring page (local, single-token write); attention runs
+# over frozen-cache and page separately and merges the softmax partials;
+# the page is flushed into the main cache every `page` steps, amortizing
+# the select-rewrite by 1/page.
+# ---------------------------------------------------------------------------
+
+def decode_attention_partial(
+    q: jax.Array,  # (B, 1, KV, G, dk)
+    k: jax.Array,  # (B, Skv, KV, dk)
+    v: jax.Array,  # (B, Skv, KV, dv)
+    position: jax.Array,
+    kv_positions: jax.Array,
+    *,
+    window: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unnormalized single-token attention: returns (acc, m, l) with
+    out = acc / l after cross-source merging."""
+    dk = q.shape[-1]
+    if CACHE_DTYPE_DOTS:
+        s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(k.dtype), k)
+        s = s.astype(jnp.float32) * (dk ** -0.5)
+    else:
+        s = jnp.einsum(
+            "bqkgd,btkd->bkgqt", q, k, preferred_element_type=jnp.float32
+        ) * (dk ** -0.5)
+    mask = (kv_positions >= 0) & (kv_positions <= position)
+    if window is not None:
+        mask &= kv_positions > position - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    m = s.max(-1)  # (B, KV, G, 1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    if CACHE_DTYPE_DOTS:
+        acc = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v.dtype), v).astype(jnp.float32)
+    else:
+        acc = jnp.einsum(
+            "bkgqt,btkd->bkgqd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+    return acc, m, l
+
+
+def merge_attention_partials(
+    parts: list[tuple[jax.Array, jax.Array, jax.Array]]
+) -> jax.Array:
+    """Combine (acc, m, l) online-softmax partials from disjoint KV sets."""
+    m_star = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_star = jnp.maximum(m_star, m)
+    acc_tot = 0.0
+    l_tot = 0.0
+    for acc, m, l in parts:
+        scale = jnp.exp(m - m_star)
+        acc_tot = acc_tot + acc * scale[..., None]
+        l_tot = l_tot + l * scale
+    return acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+def attention_decode_paged(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: dict[str, jax.Array],
+    position: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    pos_cfg: dict[str, Any],
+    window: int | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    b = x.shape[0]
+    g = n_heads // n_kv_heads
+    page = cache["k_page"].shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos_b = jnp.broadcast_to(position[None], (b, 1)).astype(jnp.int32)
+    q, k = _apply_positional(q, k, pos_b, pos_cfg)
+    slot = position % page
+    kp = jax.lax.dynamic_update_slice_in_dim(cache["k_page"], k, slot, axis=1)
+    vp = jax.lax.dynamic_update_slice_in_dim(cache["v_page"], v, slot, axis=1)
+    ppos = jax.lax.dynamic_update_slice_in_dim(
+        cache["page_pos"], position[None].astype(jnp.int32), slot, axis=0
+    )
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim)
+    parts = [
+        decode_attention_partial(qg, cache["k"], cache["v"], position,
+                                 cache["pos"], window=window),
+        decode_attention_partial(qg, kp, vp, position, ppos, window=window),
+    ]
+    out = merge_attention_partials(parts)  # (B, KV, G, 1, dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads * head_dim)
+    out = out.astype(x.dtype) @ params["wo"].astype(x.dtype)
+    new_cache = dict(cache, k_page=kp, v_page=vp, page_pos=ppos)
+    return out, new_cache
+
+
+def flush_page(cache: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """Merge the hot page into the main cache (run every `page` steps).
+
+    This is the amortized select-rewrite: full-shard cost once per page
+    of tokens instead of every token."""
+    if "k_page" not in cache:
+        return cache
+    page = cache["k_page"].shape[1]
+    ppos = cache["page_pos"]
+    valid = ppos >= 0
+    # Scatter page entries into the main cache at their absolute positions.
+    idx = jnp.where(valid, ppos, 0)
+    k = cache["k"].at[:, idx].set(
+        jnp.where(valid[None, :, None, None], cache["k_page"], cache["k"][:, idx])
+    )
+    v = cache["v"].at[:, idx].set(
+        jnp.where(valid[None, :, None, None], cache["v_page"], cache["v"][:, idx])
+    )
+    pos = cache["pos"].at[idx].set(jnp.where(valid, ppos, cache["pos"][idx]))
+    return dict(
+        cache, k=k, v=v, pos=pos,
+        k_page=jnp.zeros_like(cache["k_page"]),
+        v_page=jnp.zeros_like(cache["v_page"]),
+        page_pos=jnp.full_like(cache["page_pos"], -1),
+    )

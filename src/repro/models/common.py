@@ -1,0 +1,112 @@
+"""Shared building blocks: norms, rotary embeddings, FFNs, init helpers."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    return truncated_normal_init(key, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+def rmsnorm_init(dim: int) -> jax.Array:
+    return jnp.ones((dim,), jnp.float32)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE for Qwen2-VL).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Rotate (B, S, H, D) by per-token positions (B, S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: tuple[int, int, int],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the head dim is split into (t, h, w)
+    frequency sections, each rotated by its own position stream.
+
+    ``x``: (B, S, H, D); ``positions``: (3, B, S) int32 (t/h/w indices).
+    ``sections``: half-dim sizes per section, sum = D/2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)  # (D/2,)
+    # Build per-frequency position selector: frequency i belongs to section j.
+    sec_id = jnp.concatenate(
+        [jnp.full((s,), j, jnp.int32) for j, s in enumerate(sections)]
+    )  # (D/2,)
+    # pos_per_freq[b, s, i] = positions[sec_id[i], b, s]
+    pos = positions[sec_id].transpose(1, 2, 0).astype(jnp.float32)  # (B, S, D/2)
+    ang = pos * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    """(B, S) -> (B, S, dim) sinusoidal embedding (MusicGen-style)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU).
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff),
+        "wi_up": dense_init(k2, d_model, d_ff),
+        "wo": dense_init(k3, d_ff, d_model),
+    }
+
+
+def ffn_apply(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    actfn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    dtype = x.dtype
+    gate = actfn(x @ params["wi_gate"].astype(dtype))
+    up = x @ params["wi_up"].astype(dtype)
+    return (gate * up) @ params["wo"].astype(dtype)

@@ -1,0 +1,183 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries and keys/values are produced through low-rank latents:
+
+  q = W_uq * norm(W_dq * x)              (q_lora_rank)
+  c_kv = norm(W_dkv * x)                 (kv_lora_rank)  <- cached
+  k_nope, v = W_uk * c_kv, W_uv * c_kv
+  k_rope = RoPE(W_kr * x)                (single shared rope head) <- cached
+
+Train/prefill assemble full per-head K = [k_nope ; k_rope] and run the
+shared flash attention. Decode uses the *absorbed* formulation: W_uk is
+folded into the query so attention runs directly against the cached
+latents — the cache is (kv_lora_rank + rope_dim) per token instead of
+2 * H * head_dim, which is the entire point of MLA.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.common import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+
+def mla_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    q_lora_rank: int,
+    kv_lora_rank: int,
+    qk_nope_dim: int,
+    qk_rope_dim: int,
+    v_head_dim: int,
+) -> Params:
+    ks = jax.random.split(key, 7)
+    qk_dim = qk_nope_dim + qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], d_model, q_lora_rank),
+        "q_norm": rmsnorm_init(q_lora_rank),
+        "w_uq": dense_init(ks[1], q_lora_rank, n_heads * qk_dim),
+        "w_dkv": dense_init(ks[2], d_model, kv_lora_rank),
+        "kv_norm": rmsnorm_init(kv_lora_rank),
+        "w_uk": dense_init(ks[3], kv_lora_rank, n_heads * qk_nope_dim),
+        "w_uv": dense_init(ks[4], kv_lora_rank, n_heads * v_head_dim),
+        "w_kr": dense_init(ks[5], d_model, qk_rope_dim),
+        "wo": dense_init(ks[6], n_heads * v_head_dim, d_model),
+    }
+
+
+def _latents(params: Params, x: jax.Array, dims: dict[str, int]):
+    b, s, _ = x.shape
+    h = dims["n_heads"]
+    nope, rope = dims["qk_nope_dim"], dims["qk_rope_dim"]
+    dtype = x.dtype
+    cq = rmsnorm(x @ params["w_dq"].astype(dtype), params["q_norm"])
+    q = (cq @ params["w_uq"].astype(dtype)).reshape(b, s, h, nope + rope)
+    c_kv = rmsnorm(x @ params["w_dkv"].astype(dtype), params["kv_norm"])
+    k_rope = (x @ params["w_kr"].astype(dtype)).reshape(b, s, 1, rope)
+    return q, c_kv, k_rope
+
+
+def mla_apply(
+    params: Params,
+    x: jax.Array,
+    *,
+    dims: dict[str, int],
+    positions: jax.Array,
+    theta: float = 10000.0,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> jax.Array:
+    """Full causal MLA for training (no cache)."""
+    out, _ = mla_prefill(
+        params, x, dims=dims, positions=positions, theta=theta,
+        cache_len=None, q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+    return out
+
+
+def mla_prefill(
+    params: Params,
+    x: jax.Array,
+    *,
+    dims: dict[str, int],
+    positions: jax.Array,
+    theta: float = 10000.0,
+    cache_len: int | None = None,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    b, s, _ = x.shape
+    h = dims["n_heads"]
+    nope, rope, vdim = dims["qk_nope_dim"], dims["qk_rope_dim"], dims["v_head_dim"]
+    rank = dims["kv_lora_rank"]
+    dtype = x.dtype
+
+    q, c_kv, k_rope = _latents(params, x, dims)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    k_rope = apply_rope(k_rope, positions, theta)
+
+    k_nope = (c_kv @ params["w_uk"].astype(dtype)).reshape(b, s, h, nope)
+    v = (c_kv @ params["w_uv"].astype(dtype)).reshape(b, s, h, vdim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1
+    )
+    qg = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]  # KV=H, G=1
+    out = flash_attention(
+        qg, k, v,
+        q_positions=positions[0], kv_positions=positions[0],
+        causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk,
+    ).reshape(b, s, h * vdim)
+    out = out @ params["wo"].astype(dtype)
+
+    cache = None
+    if cache_len is not None:
+        pad = cache_len - s
+        cache = {
+            "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+            "k_rope": jnp.pad(k_rope[:, :, 0, :], ((0, 0), (0, pad), (0, 0))),
+            "pos": jnp.pad(positions[0], (0, pad), constant_values=-1),
+        }
+    return out, cache
+
+
+def mla_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: dict[str, jax.Array],
+    position: jax.Array,
+    *,
+    dims: dict[str, int],
+    theta: float = 10000.0,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Absorbed-matrix MLA decode over the latent cache."""
+    b = x.shape[0]
+    h = dims["n_heads"]
+    nope, rope, vdim = dims["qk_nope_dim"], dims["qk_rope_dim"], dims["v_head_dim"]
+    rank = dims["kv_lora_rank"]
+    dtype = x.dtype
+
+    q, c_kv_new, k_rope_new = _latents(params, x, dims)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pos_b = jnp.broadcast_to(position[None], (b, 1)).astype(jnp.int32)
+    q_rope = apply_rope(q_rope, pos_b, theta)
+    k_rope_new = apply_rope(k_rope_new, pos_b, theta)
+
+    # Update latent cache.
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_new, position, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, :, 0, :], position, axis=1
+    )
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], position[None].astype(jnp.int32), position, axis=0
+    )
+
+    # Absorb W_uk into the query: q_lat[b,1,h,r] = sum_n q_nope * w_uk[r,h,n].
+    w_uk = params["w_uk"].astype(dtype).reshape(rank, h, nope)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+    # Attention against SHARED latents: GQA with KV=1 latent head, G=H query
+    # heads. K_lat = [c_kv ; k_rope], Q_lat = [q_lat ; q_rope], V = c_kv.
+    q_full = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,1,H,rank+rope)
+    q_full = q_full * ((rank + rope) ** 0.5) * ((nope + rope) ** -0.5)  # rescale
+    q_full = q_full.reshape(b, 1, 1, h, rank + rope)
+    k_full = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]  # (B,S,1,·)
+    out_lat = decode_attention(
+        q_full, k_full, c_kv[:, :, None, :], position, cpos,
+    ).reshape(b, 1, h, rank)
+    # Un-absorb W_uv: out[b,1,h,v] = sum_r out_lat * w_uv[r,h,v].
+    w_uv = params["w_uv"].astype(dtype).reshape(rank, h, vdim)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat, w_uv).reshape(b, 1, h * vdim)
+    out = out @ params["wo"].astype(dtype)
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "pos": cpos}
+
+
+def init_mla_cache(b: int, cache_len: int, kv_lora_rank: int, qk_rope_dim: int, dtype):
+    return {
+        "c_kv": jnp.zeros((b, cache_len, kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((b, cache_len, qk_rope_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }

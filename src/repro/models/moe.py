@@ -1,0 +1,113 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based dispatch.
+
+Dispatch is the TPU-friendly grouped-matmul formulation: assignments are
+ranked within their expert (one-hot cumsum — no sort), tokens are
+scattered into an (E, C, d) buffer, experts run as one batched einsum
+(E-sharded over the ``model`` axis = expert parallelism), and results
+gather back weighted by router gates. Tokens beyond an expert's capacity
+are dropped (standard Switch/GShard semantics); the router aux loss keeps
+loads balanced so drops are rare.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import hint
+from repro.models.common import Params, dense_init
+
+# Constrain dispatch/return buffers to (experts->model, capacity->data)
+# instead of letting the SPMD partitioner guess. Toggled by dry-run
+# variants to measure the delta (EXPERIMENTS.md §Perf HC2).
+USE_SHARDING_HINTS = False
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array  # (B, S, d)
+    aux_loss: jax.Array  # scalar load-balancing loss
+    router_entropy: jax.Array  # scalar diagnostics
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, d_model, n_experts),
+        "wi_gate": jax.vmap(lambda k: dense_init(k, d_model, d_ff))(
+            jax.random.split(k2, n_experts)
+        ),
+        "wi_up": jax.vmap(lambda k: dense_init(k, d_model, d_ff))(
+            jax.random.split(k3, n_experts)
+        ),
+        "wo": jax.vmap(lambda k: dense_init(k, d_ff, d_model))(
+            jax.random.split(k4, n_experts)
+        ),
+    }
+
+
+def moe_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> MoEOutput:
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    dtype = x.dtype
+    e = n_experts
+
+    router_logits = (xt.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E) fp32
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(max(top_k, t * top_k / e * capacity_factor))
+
+    # Rank each assignment within its expert: one-hot cumsum, no sort.
+    flat_e = expert_idx.reshape(-1)  # (T*k,) expert of each assignment
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)  # (T*k, E)
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < capacity
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+
+    # Scatter tokens into the (E*C, d) dispatch buffer. Dropped tokens are
+    # value-masked into row 0 (a +1 pad row would make the buffer length
+    # E*C+1 — indivisible by any mesh axis, which forces the partitioner
+    # to replicate the scatter; EXPERIMENTS.md §Perf HC2).
+    slot = jnp.where(keep, flat_e * capacity + pos, 0)
+    contrib = xt[flat_t] * keep.astype(dtype)[:, None]
+    buf = jnp.zeros((e * capacity, d), dtype).at[slot].add(contrib)
+    buf = buf.reshape(e, capacity, d)
+    if USE_SHARDING_HINTS:
+        buf = hint(buf, "model", ("pod", "data"), None)  # E->ep, C->dp
+
+    # Batched expert FFN (E-parallel einsums; E shards over the model axis).
+    actfn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    gate_h = jnp.einsum(
+        "ecd,edf->ecf", buf, params["wi_gate"].astype(dtype)
+    )
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(dtype))
+    h = actfn(gate_h) * up_h
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dtype))  # (E,C,d)
+    if USE_SHARDING_HINTS:
+        out_e = hint(out_e, "model", ("pod", "data"), None)
+
+    # Gather back, weighted by gates (row-0 reads are gate-masked).
+    flat_gate = gate_vals.reshape(-1).astype(dtype) * keep.astype(dtype)
+    picked = out_e.reshape(e * capacity, d)[slot]
+    yt = jnp.zeros((t, d), dtype).at[flat_t].add(picked * flat_gate[:, None])
+
+    # Switch-style load-balancing loss: E * sum_e f_e * P_e.
+    f_e = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(1), axis=0
+    ) / top_k  # fraction of tokens routed to e
+    p_e = probs.mean(0)
+    aux = e * jnp.sum(f_e * p_e)
+    entropy = -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1))
+    return MoEOutput(yt.reshape(b, s, d), aux, entropy)

@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  with
+input-dependent gates a_t = exp(-c * softplus(Lambda) * sigma(W_a x_t)) is
+a diagonal linear recurrence, so train/prefill evaluates it with
+``jax.lax.associative_scan`` (O(log S) depth — the TPU-native form of the
+sequential loop) and decode carries a single (B, D) state.
+
+Block structure (Griffin recurrent block):
+  x -> [gate branch: linear -> GeLU]
+    -> [main branch: linear -> short conv1d(w=4) -> RG-LRU]
+  y = gate * rglru_out -> linear out
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+
+C_SCALE = 8.0  # the paper's fixed `c` constant
+
+
+def rglru_init(key, d_model: int, lru_width: int, conv_width: int = 4) -> Params:
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c in [0.9, 0.999] at sigma=0.5 (Griffin appendix).
+    u = jax.random.uniform(ks[0], (lru_width,), minval=0.9, maxval=0.999)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(u) / C_SCALE))  # softplus^-1
+    return {
+        "w_gate_branch": dense_init(ks[1], d_model, lru_width),
+        "w_main": dense_init(ks[2], d_model, lru_width),
+        "conv_w": 0.1 * jax.random.normal(ks[3], (conv_width, lru_width)),
+        "conv_b": jnp.zeros((lru_width,)),
+        "w_input_gate": dense_init(ks[4], lru_width, lru_width),
+        "w_rec_gate": dense_init(ks[5], lru_width, lru_width),
+        "log_lambda": log_lambda,
+        "w_out": dense_init(ks[6], lru_width, d_model),
+    }
+
+
+def _gates(params: Params, u: jax.Array):
+    """Input gate i_t and log recurrence gate log(a_t) from conv output."""
+    dtype = u.dtype
+    i_gate = jax.nn.sigmoid(u @ params["w_input_gate"].astype(dtype))
+    r = jax.nn.sigmoid(u @ params["w_rec_gate"].astype(dtype))
+    log_a = (
+        -C_SCALE
+        * jax.nn.softplus(params["log_lambda"]).astype(jnp.float32)
+        * r.astype(jnp.float32)
+    )
+    return i_gate, log_a
+
+
+def _causal_conv(params: Params, u: jax.Array, state: jax.Array | None = None):
+    """Short causal conv along time. u: (B, S, D). state: (B, W-1, D)."""
+    w = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+W-1, D)
+    out = sum(
+        full[:, i : i + u.shape[1]] * params["conv_w"][i].astype(u.dtype)
+        for i in range(w)
+    ) + params["conv_b"].astype(u.dtype)
+    new_state = full[:, -(w - 1):] if w > 1 else pad
+    return out, new_state
+
+
+def rglru_scan(log_a: jax.Array, b_in: jax.Array) -> jax.Array:
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (time)."""
+
+    def combine(lhs, rhs):
+        la1, b1 = lhs
+        la2, b2 = rhs
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b_in), axis=1)
+    return h
+
+
+def rglru_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
+):
+    """Train/prefill path. Returns y (and final state when requested)."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate_branch"].astype(dtype))
+    u = x @ params["w_main"].astype(dtype)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(params, u, conv_state)
+    i_gate, log_a = _gates(params, u)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b_in = beta * (i_gate.astype(jnp.float32) * u.astype(jnp.float32))
+    if state is not None:
+        # Seed the scan with the carried hidden state via the first step.
+        h0 = state["h"].astype(jnp.float32)
+        b_first = b_in[:, :1] + jnp.exp(log_a[:, :1]) * h0[:, None]
+        b_in = jnp.concatenate([b_first, b_in[:, 1:]], axis=1)
+    h = rglru_scan(log_a, b_in)  # (B, S, D) fp32
+    y = (gate * h.astype(dtype)) @ params["w_out"].astype(dtype)
+    if return_state:
+        return y, {"h": h[:, -1], "conv": new_conv.astype(jnp.float32)}
+    return y
+
+
+def rglru_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    state: dict[str, jax.Array],
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Single-step recurrence with carried (h, conv) state."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate_branch"].astype(dtype))
+    u = x @ params["w_main"].astype(dtype)
+    u, new_conv = _causal_conv(params, u, state["conv"])
+    i_gate, log_a = _gates(params, u)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    h = (
+        jnp.exp(log_a[:, 0]) * state["h"].astype(jnp.float32)
+        + beta[:, 0] * (i_gate[:, 0] * u[:, 0]).astype(jnp.float32)
+    )
+    y = (gate[:, 0] * h.astype(dtype)) @ params["w_out"].astype(dtype)
+    return y[:, None], {"h": h, "conv": new_conv.astype(jnp.float32)}
+
+
+def init_rglru_state(b: int, lru_width: int, conv_width: int = 4):
+    return {
+        "h": jnp.zeros((b, lru_width), jnp.float32),
+        "conv": jnp.zeros((b, conv_width - 1, lru_width), jnp.float32),
+    }

@@ -1,0 +1,520 @@
+"""Decoder-only model assembly for all assigned architectures.
+
+Layers are grouped into *cycles* (one repetition of ``block_pattern``) and
+scanned with ``jax.lax.scan`` over stacked cycle parameters — HLO size and
+compile time stay O(pattern), not O(n_layers), which matters for the
+95-layer deepseek-67b dry-run. Leftover layers (n_layers % pattern) run
+unrolled ("rem").
+
+Three entry points, matching the shape kinds:
+  forward_train  — full causal forward, logits + MoE aux loss
+  prefill        — forward + decode-cache construction
+  decode_step    — one token against the cache/recurrent state
+
+Inputs are a dict: {"tokens": (B, S) int32} or, for stubbed-frontend
+archs (audio/vlm), {"embeds": (B, S, d)}; VLM adds "mrope_positions"
+(3, B, S). Decode takes (inputs, cache, position).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import hint
+from repro.models import attention as A
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.models.common import (
+    Params,
+    dense_init,
+    ffn_apply,
+    ffn_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+    truncated_normal_init,
+)
+
+BATCH_AXES = ("pod", "data")
+
+# When > 0, full-attention layer caches get a hot ring page of this many
+# slots and decode uses the paged path (attention.attention_decode_paged).
+# Set by launch.dryrun variants; see EXPERIMENTS.md §Perf HC1.
+PAGED_DECODE = 0
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _split_layers(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(n_cycles, remainder_types)."""
+    plen = len(cfg.block_pattern)
+    return cfg.n_layers // plen, cfg.layer_types[(cfg.n_layers // plen) * plen:]
+
+
+# ---------------------------------------------------------------------------
+# Layer init / apply (single layer; block type static).
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, bt: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Params = {"norm1": rmsnorm_init(d)}
+    if bt in ("attn", "local"):
+        if cfg.use_mla:
+            p["inner"] = MLA.mla_init(
+                k1, d, cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank,
+                cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+            )
+        else:
+            p["inner"] = A.attn_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+            )
+    elif bt == "rglru":
+        p["inner"] = RG.rglru_init(k1, d, cfg.lru_width or d, cfg.conv_width)
+    elif bt == "mlstm":
+        p["inner"] = XL.mlstm_init(k1, d, cfg.n_heads)
+    elif bt == "slstm":
+        p["inner"] = XL.slstm_init(k1, d, cfg.n_heads)
+    else:
+        raise ValueError(bt)
+    if bt in ("attn", "local", "rglru") and cfg.d_ff:
+        p["norm2"] = rmsnorm_init(d)
+        if cfg.n_experts:
+            p["moe"] = MOE.moe_init(k2, d, cfg.d_ff, cfg.n_experts)
+        else:
+            p["ffn"] = ffn_init(k2, d, cfg.d_ff)
+    return p
+
+
+def _mla_dims(cfg: ModelConfig) -> dict[str, int]:
+    return dict(
+        n_heads=cfg.n_heads,
+        qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_head_dim=cfg.v_head_dim,
+        kv_lora_rank=cfg.kv_lora_rank,
+    )
+
+
+def _pos_cfg(cfg: ModelConfig, mrope_positions=None) -> dict[str, Any]:
+    if cfg.pos_kind == "mrope":
+        return {
+            "kind": "mrope",
+            "theta": cfg.rope_theta,
+            "sections": cfg.mrope_sections,
+            "mrope_positions": mrope_positions,
+        }
+    if cfg.pos_kind == "rope":
+        return {"kind": "rope", "theta": cfg.rope_theta}
+    return {"kind": "none"}
+
+
+def _ffn_part(lp: Params, x: jax.Array, cfg: ModelConfig):
+    aux = jnp.float32(0.0)
+    if "moe" in lp:
+        h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        out = MOE.moe_apply(
+            lp["moe"], h,
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, act=cfg.act,
+        )
+        x = x + out.y
+        aux = out.aux_loss
+    elif "ffn" in lp:
+        h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        x = x + ffn_apply(lp["ffn"], h, cfg.act)
+    return x, aux
+
+
+def apply_layer_train(
+    lp: Params, x: jax.Array, *, cfg: ModelConfig, bt: str,
+    positions: jax.Array, pos_cfg: dict[str, Any],
+) -> tuple[jax.Array, jax.Array]:
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if bt in ("attn", "local"):
+        window = cfg.local_window if bt == "local" else None
+        if cfg.use_mla:
+            y = MLA.mla_apply(
+                lp["inner"], h, dims=_mla_dims(cfg), positions=positions,
+                theta=cfg.rope_theta,
+            )
+        else:
+            y = A.attention_apply(
+                lp["inner"], h,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                pos_cfg=pos_cfg, window=window,
+            )
+    elif bt == "rglru":
+        y = RG.rglru_apply(lp["inner"], h)
+    elif bt == "mlstm":
+        y = XL.mlstm_apply(lp["inner"], h, n_heads=cfg.n_heads)
+    elif bt == "slstm":
+        y = XL.slstm_apply(lp["inner"], h, n_heads=cfg.n_heads)
+    else:
+        raise ValueError(bt)
+    x = x + y
+    x, aux = _ffn_part(lp, x, cfg)
+    return hint(x, BATCH_AXES, None, None), aux
+
+
+def apply_layer_prefill(
+    lp: Params, x: jax.Array, *, cfg: ModelConfig, bt: str,
+    positions: jax.Array, pos_cfg: dict[str, Any], cache_len: int,
+) -> tuple[jax.Array, jax.Array, Any]:
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if bt in ("attn", "local"):
+        window = cfg.local_window if bt == "local" else None
+        if cfg.use_mla:
+            y, cache = MLA.mla_prefill(
+                lp["inner"], h, dims=_mla_dims(cfg), positions=positions,
+                theta=cfg.rope_theta, cache_len=cache_len,
+            )
+        else:
+            y, cache = A.attention_prefill(
+                lp["inner"], h,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                pos_cfg=pos_cfg, window=window, cache_len=cache_len,
+            )
+    elif bt == "rglru":
+        y, cache = RG.rglru_apply(lp["inner"], h, return_state=True)
+    elif bt == "mlstm":
+        y, cache = XL.mlstm_apply(lp["inner"], h, n_heads=cfg.n_heads, return_state=True)
+    elif bt == "slstm":
+        y, cache = XL.slstm_apply(lp["inner"], h, n_heads=cfg.n_heads, return_state=True)
+    else:
+        raise ValueError(bt)
+    x = x + y
+    x, aux = _ffn_part(lp, x, cfg)
+    return hint(x, BATCH_AXES, None, None), aux, cache
+
+
+def apply_layer_decode(
+    lp: Params, x: jax.Array, cache: Any, position: jax.Array, *,
+    cfg: ModelConfig, bt: str, pos_cfg: dict[str, Any],
+) -> tuple[jax.Array, Any]:
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if bt in ("attn", "local"):
+        window = cfg.local_window if bt == "local" else None
+        if cfg.use_mla:
+            y, cache = MLA.mla_decode(
+                lp["inner"], h, cache, position, dims=_mla_dims(cfg),
+                theta=cfg.rope_theta,
+            )
+        elif "k_page" in cache:
+            y, cache = A.attention_decode_paged(
+                lp["inner"], h, cache, position,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, pos_cfg=pos_cfg, window=window,
+            )
+        else:
+            y, cache = A.attention_decode(
+                lp["inner"], h, cache, position,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, pos_cfg=pos_cfg, window=window,
+            )
+    elif bt == "rglru":
+        y, cache = RG.rglru_decode(lp["inner"], h, cache)
+    elif bt == "mlstm":
+        y, cache = XL.mlstm_decode(lp["inner"], h, cache, n_heads=cfg.n_heads)
+    elif bt == "slstm":
+        y, cache = XL.slstm_decode(lp["inner"], h, cache, n_heads=cfg.n_heads)
+    else:
+        raise ValueError(bt)
+    x = x + y
+    x, _ = _ffn_part(lp, x, cfg)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Model init.
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    n_cycles, rem = _split_layers(cfg)
+    keys = jax.random.split(key, 4 + len(rem))
+    d, v = cfg.d_model, cfg.vocab
+    params: Params = {
+        # d^-0.5 keeps tied-embedding logits O(1) at init.
+        "embed": truncated_normal_init(keys[0], (v, d), d ** -0.5),
+        "final_norm": rmsnorm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], d, v)
+
+    if n_cycles > 0:
+        cycle_keys = jax.random.split(keys[2], n_cycles)
+
+        def init_cycle(k):
+            lkeys = jax.random.split(k, len(cfg.block_pattern))
+            return {
+                f"blk{j}": init_layer(lk, cfg, bt)
+                for j, (bt, lk) in enumerate(zip(cfg.block_pattern, lkeys))
+            }
+
+        params["cycles"] = jax.vmap(init_cycle)(cycle_keys)
+    for i, bt in enumerate(rem):
+        params[f"rem{i}"] = init_layer(keys[4 + i], cfg, bt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, inputs: dict[str, jax.Array], cfg: ModelConfig):
+    dt = _dtype(cfg)
+    if cfg.frontend is not None:
+        x = inputs["embeds"].astype(dt)
+    else:
+        x = params["embed"].astype(dt)[inputs["tokens"]]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos_kind == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(dt)
+    return hint(x, BATCH_AXES, None, None), positions
+
+
+def _logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    return logits.astype(jnp.float32)
+
+
+def forward_train(
+    params: Params, inputs: dict[str, jax.Array], cfg: ModelConfig,
+    *, remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full causal forward. Returns (logits fp32 (B,S,V), moe_aux scalar)."""
+    n_cycles, rem = _split_layers(cfg)
+    x, positions = _embed_inputs(params, inputs, cfg)
+    pos_cfg = _pos_cfg(cfg, inputs.get("mrope_positions"))
+    aux0 = jnp.float32(0.0)
+
+    def cycle_body(carry, cycle_params):
+        x, aux = carry
+        for j, bt in enumerate(cfg.block_pattern):
+            x, a = apply_layer_train(
+                cycle_params[f"blk{j}"], x, cfg=cfg, bt=bt,
+                positions=positions, pos_cfg=pos_cfg,
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(cycle_body) if remat else cycle_body
+    if n_cycles > 0:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["cycles"])
+    else:
+        aux = aux0
+    for i, bt in enumerate(rem):
+        x, a = apply_layer_train(
+            params[f"rem{i}"], x, cfg=cfg, bt=bt,
+            positions=positions, pos_cfg=pos_cfg,
+        )
+        aux = aux + a
+    return _logits(params, x, cfg), aux
+
+
+def prefill(
+    params: Params, inputs: dict[str, jax.Array], cfg: ModelConfig,
+    *, cache_len: int | None = None,
+) -> tuple[jax.Array, Any]:
+    """Forward + cache. Returns (last-position logits (B, V), cache)."""
+    n_cycles, rem = _split_layers(cfg)
+    x, positions = _embed_inputs(params, inputs, cfg)
+    pos_cfg = _pos_cfg(cfg, inputs.get("mrope_positions"))
+    clen = cache_len if cache_len is not None else x.shape[1]
+
+    def cycle_body(x, cycle_params):
+        caches = {}
+        for j, bt in enumerate(cfg.block_pattern):
+            x, _, cache = apply_layer_prefill(
+                cycle_params[f"blk{j}"], x, cfg=cfg, bt=bt,
+                positions=positions, pos_cfg=pos_cfg, cache_len=clen,
+            )
+            caches[f"blk{j}"] = cache
+        return x, caches
+
+    cache_out: dict[str, Any] = {}
+    if n_cycles > 0:
+        x, cycle_caches = jax.lax.scan(cycle_body, x, params["cycles"])
+        cache_out["cycles"] = cycle_caches
+    for i, bt in enumerate(rem):
+        x, _, cache = apply_layer_prefill(
+            params[f"rem{i}"], x, cfg=cfg, bt=bt,
+            positions=positions, pos_cfg=pos_cfg, cache_len=clen,
+        )
+        cache_out[f"rem{i}"] = cache
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    return logits, cache_out
+
+
+def decode_step(
+    params: Params,
+    inputs: dict[str, jax.Array],  # token (B,1) or embeds (B,1,d)
+    cache: Any,
+    position: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+    unroll: bool = False,
+) -> tuple[jax.Array, Any]:
+    """One decode step. Returns (logits (B, V), new cache).
+
+    ``unroll=True`` replaces the scan-over-cycles with a Python loop:
+    each layer's cache slice is read/written individually instead of
+    through the scan's stacked ys buffer. XLA's scan output-stacking
+    round-trips the whole stacked cache through a dtype-converted copy
+    every iteration (measured ~900 GB/step on deepseek-67b decode);
+    unrolling removes it — see EXPERIMENTS.md §Perf HC1.
+    """
+    n_cycles, rem = _split_layers(cfg)
+    dt = _dtype(cfg)
+    if cfg.frontend is not None and "embeds" in inputs:
+        x = inputs["embeds"].astype(dt)
+    else:
+        x = params["embed"].astype(dt)[inputs["tokens"]]
+    b = x.shape[0]
+    if cfg.pos_kind == "sinusoidal":
+        pos_b = jnp.broadcast_to(position[None], (b, 1)).astype(jnp.int32)
+        x = x + sinusoidal_positions(pos_b, cfg.d_model).astype(dt)
+    mrope = None
+    if cfg.pos_kind == "mrope":
+        # Text continuation: t = h = w = position.
+        mrope = jnp.broadcast_to(position[None, None, None], (3, b, 1)).astype(jnp.int32)
+    pos_cfg = _pos_cfg(cfg, mrope)
+
+    new_cache: dict[str, Any] = {}
+
+    def cycle_body(x, xs):
+        cycle_params, cycle_cache = xs
+        new_caches = {}
+        for j, bt in enumerate(cfg.block_pattern):
+            x, c = apply_layer_decode(
+                cycle_params[f"blk{j}"], x, cycle_cache[f"blk{j}"], position,
+                cfg=cfg, bt=bt, pos_cfg=pos_cfg,
+            )
+            new_caches[f"blk{j}"] = c
+        return x, new_caches
+
+    if n_cycles > 0 and "cycles_list" in cache:
+        # Flat (unstacked) cache: unrolled layers, per-layer buffers,
+        # single-token in-place updates.
+        new_list = []
+        for i in range(n_cycles):
+            cp = jax.tree.map(lambda a: a[i], params["cycles"])
+            x, nc = cycle_body(x, (cp, cache["cycles_list"][i]))
+            new_list.append(nc)
+        new_cache["cycles_list"] = new_list
+    elif n_cycles > 0 and unroll == "carry":
+        # Cache rides the scan CARRY with per-layer dynamic-index update.
+        # The default path returns caches as scan ys; XLA's ys stacking
+        # round-trips the whole stacked buffer through a converted copy
+        # each iteration (HC1 in EXPERIMENTS.md §Perf). Carry + DUS keeps
+        # per-step traffic at slice granularity and aliases the donated
+        # input buffer.
+        def carry_body(carry, xs_i):
+            x, stacked = carry
+            i, cycle_params = xs_i
+            cc = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                stacked,
+            )
+            x, nc = cycle_body(x, (cycle_params, cc))
+            stacked = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, i, 0),
+                stacked, nc,
+            )
+            return (x, stacked), None
+
+        (x, cycles_new), _ = jax.lax.scan(
+            carry_body, (x, cache["cycles"]),
+            (jnp.arange(n_cycles), params["cycles"]),
+        )
+        new_cache["cycles"] = cycles_new
+    elif n_cycles > 0 and unroll:
+        per_cycle = []
+        for i in range(n_cycles):
+            cp = jax.tree.map(lambda a: a[i], params["cycles"])
+            cc = jax.tree.map(lambda a: a[i], cache["cycles"])
+            x, nc = cycle_body(x, (cp, cc))
+            per_cycle.append(nc)
+        new_cache["cycles"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *per_cycle
+        )
+    elif n_cycles > 0:
+        x, cycles_new = jax.lax.scan(
+            cycle_body, x, (params["cycles"], cache["cycles"])
+        )
+        new_cache["cycles"] = cycles_new
+    for i, bt in enumerate(rem):
+        x, c = apply_layer_decode(
+            params[f"rem{i}"], x, cache[f"rem{i}"], position,
+            cfg=cfg, bt=bt, pos_cfg=pos_cfg,
+        )
+        new_cache[f"rem{i}"] = c
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache init.
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, bt: str, b: int, cache_len: int, dt) -> Any:
+    if bt in ("attn", "local"):
+        if cfg.use_mla:
+            return MLA.init_mla_cache(b, cache_len, cfg.kv_lora_rank, cfg.qk_rope_dim, dt)
+        window = cfg.local_window if bt == "local" else None
+        page = PAGED_DECODE if (bt == "attn" and PAGED_DECODE) else 0
+        return A.init_attn_cache(
+            b, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            window=window, page=page,
+        )
+    if bt == "rglru":
+        return RG.init_rglru_state(b, cfg.lru_width or cfg.d_model, cfg.conv_width)
+    if bt == "mlstm":
+        return XL.init_mlstm_state(b, cfg.d_model, cfg.n_heads)
+    if bt == "slstm":
+        return XL.init_slstm_state(b, cfg.d_model)
+    raise ValueError(bt)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, stacked: bool = True
+) -> Any:
+    """Decode cache. ``stacked=True`` packs per-cycle caches into scanned
+    (n_cycles, ...) arrays; ``stacked=False`` keeps one buffer per layer
+    ("flat" layout) so decode updates are single-token DUS with perfect
+    donation aliasing — the scan ys-restacking rewrites the entire
+    per-layer cache every step (EXPERIMENTS.md §Perf HC1)."""
+    dt = _dtype(cfg)
+    n_cycles, rem = _split_layers(cfg)
+    out: dict[str, Any] = {}
+    if n_cycles > 0:
+        def cycle():
+            return {
+                f"blk{j}": _layer_cache(cfg, bt, batch, cache_len, dt)
+                for j, bt in enumerate(cfg.block_pattern)
+            }
+
+        if stacked:
+            out["cycles"] = jax.tree.map(
+                lambda a: jnp.tile(a[None], (n_cycles,) + (1,) * a.ndim), cycle()
+            )
+        else:
+            out["cycles_list"] = [cycle() for _ in range(n_cycles)]
+    for i, bt in enumerate(rem):
+        out[f"rem{i}"] = _layer_cache(cfg, bt, batch, cache_len, dt)
+    return out

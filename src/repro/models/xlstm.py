@@ -1,0 +1,320 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM and sLSTM.
+
+mLSTM: matrix-memory LSTM with exponential gating. Training/prefill uses
+the parallel (attention-like) stabilized form; decode carries the
+(C, n, m) recurrent state — C is a (dk x dv) matrix memory per head.
+
+sLSTM: scalar-memory LSTM with exponential gating and head-wise recurrent
+mixing; inherently sequential, evaluated with ``lax.scan`` over time.
+
+Block wiring follows the xLSTM paper: mLSTM blocks use pre-up-projection
+(factor 2) with a short causal conv feeding q/k; sLSTM blocks use
+post-up-projection (factor 4/3) like a transformer FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+
+MLSTM_PROJ_FACTOR = 2.0
+SLSTM_PROJ_FACTOR = 4.0 / 3.0
+CONV_WIDTH = 4
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int) -> Params:
+    d_inner = int(MLSTM_PROJ_FACTOR * d_model)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], d_model, d_inner),
+        "w_up_gate": dense_init(ks[1], d_model, d_inner),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (CONV_WIDTH, d_inner)),
+        "conv_b": jnp.zeros((d_inner,)),
+        "wq": dense_init(ks[3], d_inner, d_inner),
+        "wk": dense_init(ks[4], d_inner, d_inner),
+        "wv": dense_init(ks[5], d_inner, d_inner),
+        "w_igate": dense_init(ks[6], d_inner, n_heads),
+        "w_fgate": dense_init(ks[7], d_inner, n_heads),
+        "fgate_bias": 3.0 * jnp.ones((n_heads,)),  # init toward remembering
+        "igate_bias": -1.0 * jnp.ones((n_heads,)),
+        "skip_scale": jnp.ones((d_inner,)),
+        "w_down": dense_init(ks[8], d_inner, d_model),
+    }
+
+
+def _mlstm_conv(params: Params, u: jax.Array, state: jax.Array | None):
+    w = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(
+        full[:, i : i + u.shape[1]] * params["conv_w"][i].astype(u.dtype)
+        for i in range(w)
+    ) + params["conv_b"].astype(u.dtype)
+    return jax.nn.silu(out), full[:, -(w - 1):]
+
+
+def mlstm_parallel(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,
+    v: jax.Array,
+    log_f: jax.Array,  # (B, S, H) log sigmoid forget gates
+    log_i: jax.Array,  # (B, S, H) log input gates (pre-exp)
+    chunk: int = 256,
+) -> jax.Array:
+    """Stabilized parallel mLSTM (chunked over queries to bound memory).
+
+    D[t,s] = exp(F[t] - F[s] + log_i[s] - m[t]), F = cumsum(log_f);
+    h_t = (sum_s D[t,s] (q_t k_s / sqrt(d)) v_s) / max(|l_t|, exp(-m_t)).
+    """
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    f_cum = jnp.cumsum(log_f, axis=1)  # (B, S, H)
+
+    chunk = min(chunk, s)
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        padf = ((0, 0), (0, s_pad - s), (0, 0))
+        q = jnp.pad(q, padf + ((0, 0),))
+        f_cum_q = jnp.pad(f_cum, padf)
+    else:
+        f_cum_q = f_cum
+    nq = s_pad // chunk
+    qs = q.reshape(b, nq, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    fq = f_cum_q.reshape(b, nq, chunk, h).transpose(1, 0, 2, 3)
+    pos_q = jnp.arange(s_pad).reshape(nq, chunk)
+    pos_k = jnp.arange(s)
+
+    def q_step(_, inp):
+        qc, fqc, pq = inp  # (B, c, H, dh), (B, c, H), (c,)
+        # scores over ALL keys (bounded: (B, H, c, S)).
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qc, k, preferred_element_type=jnp.float32) * scale
+        logd = (
+            fqc.transpose(0, 2, 1)[..., None]  # (B,H,c,1)
+            - f_cum.transpose(0, 2, 1)[:, :, None, :]  # (B,H,1,S)
+            + log_i.transpose(0, 2, 1)[:, :, None, :]
+        )
+        causal = pos_k[None, :] <= pq[:, None]  # (c, S)
+        logd = jnp.where(causal[None, None], logd, -jnp.inf)
+        m = jnp.max(logd, axis=-1, keepdims=True)  # (B,H,c,1)
+        m = jnp.maximum(m, -1e30)
+        d = jnp.exp(logd - m)
+        wts = sc * d
+        l = jnp.abs(wts.sum(-1, keepdims=True))
+        denom = jnp.maximum(l, jnp.exp(-m))
+        out = jnp.einsum(
+            "bhqk,bkhd->bqhd", (wts / denom).astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qs, fq, pos_q))  # (nq,B,c,H,dh)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, h, dh)
+    return out[:, :s].astype(v.dtype)
+
+
+def mlstm_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_heads: int,
+    state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    dtype = x.dtype
+    u = x @ params["w_up"].astype(dtype)  # (B, S, di)
+    z = x @ params["w_up_gate"].astype(dtype)
+    conv_state = None if state is None else state["conv"]
+    c, new_conv = _mlstm_conv(params, u, conv_state)
+    di = u.shape[-1]
+    dh = di // n_heads
+    q = (c @ params["wq"].astype(dtype)).reshape(b, s, n_heads, dh)
+    k = (c @ params["wk"].astype(dtype)).reshape(b, s, n_heads, dh)
+    v = (u @ params["wv"].astype(dtype)).reshape(b, s, n_heads, dh)
+    log_f = jax.nn.log_sigmoid(
+        (c @ params["w_fgate"].astype(dtype)).astype(jnp.float32)
+        + params["fgate_bias"]
+    )
+    log_i = (
+        (c @ params["w_igate"].astype(dtype)).astype(jnp.float32)
+        + params["igate_bias"]
+    )
+    h = mlstm_parallel(q, k, v, log_f, log_i)  # (B, S, H, dh)
+    h = h.reshape(b, s, di)
+    h = h + params["skip_scale"].astype(dtype) * c  # learnable skip
+    y = (h * jax.nn.silu(z)) @ params["w_down"].astype(dtype)
+    if not return_state:
+        return y
+    # Build the recurrent state from the full sequence (for prefill).
+    # C_S = sum_s exp(F_S - F_s + i_s - m_S) v_s k_s^T  (stabilized by m_S).
+    f_cum = jnp.cumsum(log_f, axis=1)
+    rel = f_cum[:, -1:, :] - f_cum + log_i  # (B, S, H)
+    m_last = jnp.max(rel, axis=1)  # (B, H)
+    w_s = jnp.exp(rel - m_last[:, None, :])  # (B, S, H)
+    c_mat = jnp.einsum("bshk,bshv,bsh->bhkv", k.astype(jnp.float32), v.astype(jnp.float32), w_s)
+    n_vec = jnp.einsum("bshk,bsh->bhk", k.astype(jnp.float32), w_s)
+    new_state = {
+        "c": c_mat, "n": n_vec, "m": m_last, "conv": new_conv.astype(jnp.float32),
+    }
+    return y, new_state
+
+
+def mlstm_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    state: dict[str, jax.Array],
+    *,
+    n_heads: int,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    b = x.shape[0]
+    dtype = x.dtype
+    u = x @ params["w_up"].astype(dtype)
+    z = x @ params["w_up_gate"].astype(dtype)
+    c, new_conv = _mlstm_conv(params, u, state["conv"])
+    di = u.shape[-1]
+    dh = di // n_heads
+    q = (c @ params["wq"].astype(dtype)).reshape(b, n_heads, dh)
+    k = (c @ params["wk"].astype(dtype)).reshape(b, n_heads, dh)
+    v = (u @ params["wv"].astype(dtype)).reshape(b, n_heads, dh)
+    log_f = jax.nn.log_sigmoid(
+        (c[:, 0] @ params["w_fgate"].astype(dtype)).astype(jnp.float32)
+        + params["fgate_bias"]
+    )  # (B, H)
+    log_i = (
+        (c[:, 0] @ params["w_igate"].astype(dtype)).astype(jnp.float32)
+        + params["igate_bias"]
+    )
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_mat = f_s[..., None, None] * state["c"] + i_s[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n_vec = f_s[..., None] * state["n"] + i_s[..., None] * kf
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, c_mat)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_vec)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).reshape(b, 1, di).astype(dtype)
+    h = h + params["skip_scale"].astype(dtype) * c
+    y = (h * jax.nn.silu(z)) @ params["w_down"].astype(dtype)
+    return y, {"c": c_mat, "n": n_vec, "m": m_new, "conv": new_conv.astype(jnp.float32)}
+
+
+def init_mlstm_state(b: int, d_model: int, n_heads: int):
+    di = int(MLSTM_PROJ_FACTOR * d_model)
+    dh = di // n_heads
+    return {
+        "c": jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((b, n_heads, dh), jnp.float32),
+        "m": jnp.full((b, n_heads), 0.0, jnp.float32),
+        "conv": jnp.zeros((b, CONV_WIDTH - 1, di), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int) -> Params:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    d_up = int(SLSTM_PROJ_FACTOR * d_model)
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model),  # i, f, z, o
+        "r_gates": 0.5 * jax.vmap(lambda k: dense_init(k, dh, 4 * dh))(
+            jax.random.split(ks[1], n_heads)
+        ),  # head-wise recurrent mixing (H, dh, 4*dh)
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d_model,)), 3.0 * jnp.ones((d_model,)), jnp.zeros((2 * d_model,))]
+        ),
+        "w_up_gate": dense_init(ks[2], d_model, d_up),
+        "w_up": dense_init(ks[3], d_model, d_up),
+        "w_down": dense_init(ks[4], d_up, d_model),
+    }
+
+
+def _slstm_cell(params: Params, x_t: jax.Array, state, *, n_heads: int):
+    """One sLSTM time step. x_t: (B, d). state: dict of (B, d)/(B, H...)"""
+    b, d = x_t.shape
+    dh = d // n_heads
+    dtype = x_t.dtype
+    h_prev = state["h"].astype(dtype)  # (B, d)
+    # Recurrent head-wise contribution.
+    hh = h_prev.reshape(b, n_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, params["r_gates"].astype(dtype))
+    # Reorder head-blocked (i,f,z,o) chunks to match w_gates' (i|f|z|o) layout.
+    rec = rec.reshape(b, n_heads, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    gates = (
+        x_t @ params["w_gates"].astype(dtype)
+        + rec
+        + params["gate_bias"].astype(dtype)
+    ).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_g * state["c"] + i_g * jnp.tanh(z_raw)
+    n_new = f_g * state["n"] + i_g
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1.0)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_heads: int,
+    state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    dtype = x.dtype
+    st = init_slstm_state(b, d) if state is None else state
+
+    def step(carry, x_t):
+        new = _slstm_cell(params, x_t, carry, n_heads=n_heads)
+        return new, new["h"]
+
+    st, hs = jax.lax.scan(step, st, x.transpose(1, 0, 2))  # hs: (S, B, d)
+    h = hs.transpose(1, 0, 2).astype(dtype)
+    up = jax.nn.gelu(h @ params["w_up_gate"].astype(dtype)) * (
+        h @ params["w_up"].astype(dtype)
+    )
+    y = up @ params["w_down"].astype(dtype)
+    if return_state:
+        return y, st
+    return y
+
+
+def slstm_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    state: dict[str, jax.Array],
+    *,
+    n_heads: int,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    new = _slstm_cell(params, x[:, 0], state, n_heads=n_heads)
+    h = new["h"][:, None].astype(x.dtype)
+    up = jax.nn.gelu(h @ params["w_up_gate"].astype(x.dtype)) * (
+        h @ params["w_up"].astype(x.dtype)
+    )
+    y = up @ params["w_down"].astype(x.dtype)
+    return y, new
+
+
+def init_slstm_state(b: int, d_model: int):
+    z = jnp.zeros((b, d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}

@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, init_opt_state, adamw_update  # noqa: F401
+from repro.train.train_step import TrainConfig, make_train_step, loss_fn  # noqa: F401

@@ -1,0 +1,114 @@
+"""Training step: loss, grads, microbatch accumulation, optimizer update.
+
+Cross-entropy is computed over vocab-sharded logits (the lm_head keeps the
+vocab dim on the tensor axis, so the softmax reductions become small
+all-reduces instead of gathering (B, S, V) logits). Optional int8
+error-feedback gradient compression quantizes gradients before the
+optimizer (the EF buffer lives in the step state), cutting DP-sync bytes
+when the synchronization is expressed explicitly (see
+``distributed.compression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import hint
+from repro.models.transformer import BATCH_AXES, forward_train
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    moe_aux_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+    num_microbatches: int = 1
+    remat: bool = True
+    compression: str | None = None  # None | "int8_ef"
+
+
+def cross_entropy(
+    logits: jax.Array,  # (B, S, V) fp32, vocab possibly sharded
+    labels: jax.Array,  # (B, S) int32
+    z_loss_weight: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Mean token xent (+ z-loss), plus accuracy for metrics."""
+    logits_max = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+    shifted = logits - logits_max
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    gold = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    xent = jnp.mean(lse - gold)
+    if z_loss_weight:
+        xent = xent + z_loss_weight * jnp.mean(jnp.square(lse + logits_max[..., 0]))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return xent, acc
+
+
+def loss_fn(
+    params: Any,
+    batch: dict[str, jax.Array],
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    logits, aux = forward_train(params, batch, cfg, remat=tcfg.remat)
+    logits = hint(logits, BATCH_AXES, None, "model")
+    xent, acc = cross_entropy(logits, batch["labels"], tcfg.z_loss_weight)
+    loss = xent + tcfg.moe_aux_weight * aux
+    return loss, {"xent": xent, "accuracy": acc, "moe_aux": aux}
+
+
+def _split_microbatches(batch: dict[str, jax.Array], m: int) -> dict[str, jax.Array]:
+    def split(x):
+        if x.ndim >= 2 and x.shape[0] % m == 0:
+            return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+        return jnp.broadcast_to(x[None], (m,) + x.shape)
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """Build the jit-able train_step(params, opt_state, batch) function."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, tcfg
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if tcfg.num_microbatches > 1:
+            m = tcfg.num_microbatches
+            micro = _split_microbatches(batch, m)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / m, g_acc, grads
+                )
+                return (g_acc, l_acc + loss / m), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics_seq = jax.lax.scan(acc_fn, (g0, 0.0), micro)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics_seq)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if tcfg.compression == "int8_ef":
+            from repro.distributed.compression import ef_int8_roundtrip
+
+            grads, opt_state = ef_int8_roundtrip(grads, opt_state)
+
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, tcfg.opt
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

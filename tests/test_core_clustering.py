@@ -1,0 +1,221 @@
+"""Grid clustering, event conditioning, and baseline algorithms."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import dbscan, dbscan_centroids, kmeans
+from repro.core.events import (
+    BatcherConfig,
+    batch_from_arrays,
+    dual_threshold_batches,
+    pack_words,
+    persistent_event_filter,
+    roi_filter,
+    unpack_words,
+)
+from repro.core.grid_clustering import (
+    GridConfig,
+    form_clusters,
+    grid_cluster,
+    merge_adjacent,
+    quantize,
+    quantize_packed,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _batch(xy, capacity=256):
+    xy = np.asarray(xy)
+    n = len(xy)
+    return batch_from_arrays(
+        xy[:, 0], xy[:, 1], np.arange(n), np.zeros(n, np.int32), capacity
+    )
+
+
+# ---------------------------------------------------------------------------
+# packing / quantization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 65535), st.integers(0, 65535))
+def test_pack_unpack_roundtrip(x, y):
+    w = pack_words(jnp.asarray([x]), jnp.asarray([y]))
+    xx, yy = unpack_words(w)
+    assert int(xx[0]) == x and int(yy[0]) == y
+
+
+def test_quantize_matches_division():
+    x = jnp.asarray(RNG.integers(0, 640, 500), jnp.int32)
+    y = jnp.asarray(RNG.integers(0, 480, 500), jnp.int32)
+    for cs in (16, 10, 32):
+        cx, cy = quantize(x, y, cs)
+        np.testing.assert_array_equal(np.asarray(cx), np.asarray(x) // cs)
+        np.testing.assert_array_equal(np.asarray(cy), np.asarray(y) // cs)
+
+
+def test_quantize_packed_wire_identity():
+    x = RNG.integers(0, 640, 100)
+    y = RNG.integers(0, 480, 100)
+    w = pack_words(jnp.asarray(x), jnp.asarray(y))
+    out = quantize_packed(w, 16)
+    cx, cy = unpack_words(out)
+    np.testing.assert_array_equal(np.asarray(cx), x // 16)
+    np.testing.assert_array_equal(np.asarray(cy), y // 16)
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+def test_cluster_single_blob():
+    pts = RNG.normal(0, 2.0, (40, 2)) + np.array([200, 100])
+    clusters = grid_cluster(_batch(pts.astype(int)))
+    assert int(clusters.num_valid()) >= 1
+    k = int(np.argmax(np.asarray(clusters.count)))
+    assert abs(float(clusters.centroid_x[k]) - 200) < 16
+    assert abs(float(clusters.centroid_y[k]) - 100) < 16
+
+
+def test_min_events_threshold():
+    # 3 events in one cell, 7 in another: only the 7 survives min_events=5.
+    pts = [[5, 5]] * 3 + [[100, 100]] * 7
+    clusters = grid_cluster(_batch(pts), GridConfig(min_events=5))
+    assert int(clusters.num_valid()) == 1
+    assert int(np.asarray(clusters.count).max()) == 7
+
+
+def test_centroid_within_cell():
+    pts = [[37, 53]] * 6
+    clusters = grid_cluster(_batch(pts))
+    k = int(np.argmax(np.asarray(clusters.count)))
+    assert float(clusters.centroid_x[k]) == pytest.approx(37.0)
+    assert float(clusters.centroid_y[k]) == pytest.approx(53.0)
+    assert int(clusters.cell_x[k]) == 37 // 16
+    assert int(clusters.cell_y[k]) == 53 // 16
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 639), st.integers(0, 479)),
+        min_size=1, max_size=200,
+    )
+)
+def test_cluster_count_conservation(points):
+    """Sum of per-cell counts equals number of valid events (O(n) single
+    pass loses nothing)."""
+    clusters = form_clusters(_batch(points), GridConfig(min_events=1, max_clusters=1200))
+    # every event lands in exactly one cell
+    assert int(np.asarray(clusters.count).sum()) == len(points)
+
+
+def test_merge_adjacent_combines_straddling_object():
+    # Object straddles the x=16 cell boundary.
+    pts = [[14, 8]] * 5 + [[18, 8]] * 4
+    cfg = GridConfig(min_events=4)
+    clusters = form_clusters(_batch(pts), cfg)
+    assert int(clusters.num_valid()) == 2
+    merged = merge_adjacent(clusters, cfg)
+    assert int(merged.num_valid()) == 1
+    k = int(np.argmax(np.asarray(merged.count)))
+    assert int(merged.count[k]) == 9
+    expect_x = (14 * 5 + 18 * 4) / 9
+    assert float(merged.centroid_x[k]) == pytest.approx(expect_x, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# conditioning
+# ---------------------------------------------------------------------------
+
+def test_roi_filter():
+    b = _batch([[10, 10], [300, 200], [600, 430]])
+    out = roi_filter(b)  # default ROI [20,20,580,420]
+    assert np.asarray(out.valid)[:3].tolist() == [False, True, False]
+
+
+def test_persistent_event_filter_drops_hot_pixel():
+    pts = [[50, 50]] * 20 + [[100, 100]] * 3
+    out = persistent_event_filter(_batch(pts), max_repeats=8)
+    v = np.asarray(out.valid)
+    assert not v[:20].any()
+    assert v[20:23].all()
+
+
+def test_dual_threshold_batcher_size_and_time():
+    # 1000 events in 1 us steps -> size threshold (250) fires first.
+    t = np.arange(1000)
+    x = np.zeros(1000, np.int32)
+    batches = list(dual_threshold_batches(x, x, t, x))
+    assert all(int(b.count()) <= 250 for b, _ in batches)
+    assert int(batches[0][0].count()) == 250
+    # 100 events spread over 100 ms -> time threshold (20 ms) fires first.
+    t = np.arange(0, 100_000, 1000)
+    x = np.zeros(100, np.int32)
+    batches = list(dual_threshold_batches(x, x, t, x))
+    for b, sl in batches:
+        tt = t[sl]
+        assert tt[-1] - tt[0] < 20_000
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 500_000), min_size=1, max_size=400))
+def test_batcher_covers_stream_once(times):
+    """Every event lands in exactly one batch, in order."""
+    t = np.sort(np.asarray(times, np.int64))
+    n = len(t)
+    x = np.zeros(n, np.int32)
+    cfg = BatcherConfig()
+    seen = []
+    for b, sl in dual_threshold_batches(x, x, t, x, cfg):
+        seen.extend(range(sl.start, sl.stop))
+        assert int(b.count()) == min(sl.stop - sl.start, cfg.capacity)
+    assert seen == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# baselines (paper Table I)
+# ---------------------------------------------------------------------------
+
+def _three_blobs(n_per=20):
+    blobs = [(100, 100), (300, 200), (500, 400)]
+    pts = np.concatenate(
+        [RNG.normal(0, 2, (n_per, 2)) + np.array(c) for c in blobs]
+    )
+    return pts.astype(int), blobs
+
+
+def test_kmeans_recovers_blobs():
+    pts, blobs = _three_blobs()
+    res = kmeans(_batch(pts), k=3, iters=20)
+    cents = np.asarray(res.centroids)
+    for bx, by in blobs:
+        d = np.hypot(cents[:, 0] - bx, cents[:, 1] - by).min()
+        assert d < 10, (cents, blobs)
+
+
+def test_dbscan_recovers_blobs_and_noise():
+    pts, blobs = _three_blobs()
+    noise = np.array([[50, 400], [600, 50]])
+    allpts = np.concatenate([pts, noise])
+    res = dbscan(_batch(allpts, capacity=128), eps=8.0, min_pts=5)
+    labels = np.asarray(res.labels)[: len(allpts)]
+    assert int(res.n_clusters) == 3
+    # noise points unlabeled
+    assert (labels[-2:] == -1).all()
+    cents, counts = dbscan_centroids(_batch(allpts, capacity=128), res)
+    cents = np.asarray(cents)
+    for bx, by in blobs:
+        d = np.hypot(cents[:, 0] - bx, cents[:, 1] - by)
+        assert d.min() < 6
+
+
+def test_grid_agrees_with_dbscan_on_separated_blobs():
+    pts, blobs = _three_blobs()
+    g = grid_cluster(_batch(pts), GridConfig(min_events=5))
+    d = dbscan(_batch(pts, capacity=128), eps=8.0, min_pts=5)
+    # same number of objects found (grid may split cell-straddlers; merge)
+    merged = merge_adjacent(g, GridConfig(min_events=5))
+    assert int(d.n_clusters) == 3
+    assert 3 <= int(merged.num_valid()) <= 4

@@ -1,0 +1,87 @@
+"""Cluster quality metrics (paper Sec. III-E) unit tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.events import batch_from_arrays
+from repro.core.grid_clustering import GridConfig, grid_cluster
+
+RNG = np.random.default_rng(3)
+
+
+def test_shannon_entropy_bounds():
+    flat = jnp.zeros((48, 48))
+    assert float(M.shannon_entropy(flat)) == pytest.approx(0.0, abs=1e-6)
+    # maximal histogram spread: one pixel per bin level
+    vals = jnp.asarray(np.linspace(0, 0.999, 48 * 48).reshape(48, 48), jnp.float32)
+    h = float(M.shannon_entropy(vals))
+    assert h == pytest.approx(np.log2(M.HIST_BINS), abs=0.01)
+
+
+def test_renyi_le_shannon():
+    patch = jnp.asarray(RNG.random((48, 48)), jnp.float32)
+    assert float(M.renyi_entropy(patch)) <= float(M.shannon_entropy(patch)) + 1e-6
+
+
+def test_local_contrast():
+    patch = jnp.asarray(RNG.random((48, 48)), jnp.float32)
+    assert float(M.local_contrast(patch)) == pytest.approx(float(jnp.std(patch)), rel=1e-6)
+
+
+def test_edge_density_detects_edge():
+    patch = np.zeros((48, 48), np.float32)
+    patch[:, 24:] = 1.0  # vertical edge
+    d = float(M.edge_density(jnp.asarray(patch)))
+    assert 0.02 < d < 0.2
+    assert float(M.edge_density(jnp.zeros((48, 48)))) == 0.0
+
+
+def test_extract_window_clamps_at_borders():
+    frame = jnp.asarray(RNG.random((480, 640)), jnp.float32)
+    w = M.extract_window(frame, jnp.asarray(2), jnp.asarray(470))
+    assert w.shape == (48, 48)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(frame[432:480, 0:48]))
+
+
+def test_cluster_metrics_structure_and_validity():
+    pts = np.array([[100, 100]] * 8 + [[300, 300]] * 2)
+    batch = batch_from_arrays(pts[:, 0], pts[:, 1], np.arange(10), np.zeros(10))
+    clusters = grid_cluster(batch, GridConfig(min_events=5))
+    frame = M.reconstruct_frame(batch)
+    mets = M.cluster_metrics(frame, clusters)
+    assert set(mets) == set(M.METRIC_NAMES)
+    valid = np.asarray(clusters.valid)
+    ec = np.asarray(mets["event_count"])
+    assert ec[valid].max() == 8
+    assert (ec[~valid] == 0).all()  # invalid slots zeroed
+
+
+def test_correlation_matrix_properties():
+    x = RNG.normal(size=(200, 6)).astype(np.float32)
+    x[:, 1] = x[:, 0] * 2 + 0.01 * RNG.normal(size=200)  # strongly correlated
+    c = np.asarray(M.correlation_matrix(jnp.asarray(x)))
+    assert c.shape == (6, 6)
+    np.testing.assert_allclose(np.diag(c), 1.0, atol=1e-4)
+    np.testing.assert_allclose(c, c.T, atol=1e-5)
+    assert c[0, 1] > 0.95
+
+
+def test_rso_entropy_exceeds_star_entropy():
+    """Fig. 5's separation: moving streaks have richer structure than
+    static points in the reconstructed frame."""
+    n = 60
+    # streak: events along a 30-px line; star: all on one pixel w/ jitter.
+    xs = np.linspace(200, 230, n) + RNG.normal(0, 0.6, n)
+    ys = np.full(n, 240) + RNG.normal(0, 0.6, n)
+    sx = np.full(n, 400) + RNG.normal(0, 0.6, n)
+    sy = np.full(n, 120) + RNG.normal(0, 0.6, n)
+    batch = batch_from_arrays(
+        np.concatenate([xs, sx]).astype(int),
+        np.concatenate([ys, sy]).astype(int),
+        np.arange(2 * n), np.zeros(2 * n),
+    )
+    frame = M.reconstruct_frame(batch)
+    h_rso = float(M.shannon_entropy(M.extract_window(frame, 215.0, 240.0)))
+    h_star = float(M.shannon_entropy(M.extract_window(frame, 400.0, 120.0)))
+    assert h_rso > h_star

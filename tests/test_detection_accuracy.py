@@ -1,0 +1,60 @@
+"""Paper-claims validation: accuracy vs min_events (Fig. 10b, Table IV).
+
+The paper reports 97% accuracy at the min_events = 5 operating point,
+with the threshold sweep peaking there. The synthetic EVAS-like suite
+reproduces the regime; we assert the same qualitative curve and a >= 95%
+peak in the 4-6 threshold neighbourhood.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, evaluate_detection, threshold_sweep
+from repro.core.tracking import confirmed
+from repro.data.synthetic import make_recording
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    recs = [
+        make_recording(seed=s, duration_s=1.0, n_rsos=1 + (s % 3))
+        for s in (1, 2, 3)
+    ] + [make_recording(seed=11, duration_s=1.0, n_rsos=1, lens="telephoto"),
+         make_recording(seed=21, duration_s=1.0, n_rsos=2, lens="wide")]
+    return threshold_sweep(recs, thresholds=(2, 3, 4, 5, 6, 8, 10))
+
+
+def test_accuracy_at_paper_threshold(sweep):
+    acc5 = sweep[5].accuracy
+    assert acc5 >= 0.95, f"accuracy@5 = {acc5:.3f}"
+
+
+def test_curve_peaks_near_five(sweep):
+    accs = {t: s.accuracy for t, s in sweep.items()}
+    best = max(accs, key=accs.get)
+    assert best in (4, 5, 6), accs
+    # both flanks strictly worse than the peak region
+    assert accs[2] < accs[best] - 0.05
+    assert accs[10] < accs[best]
+
+
+def test_precision_monotone_in_threshold(sweep):
+    precs = [sweep[t].precision for t in (2, 3, 4, 5, 6)]
+    assert all(b >= a - 1e-9 for a, b in zip(precs, precs[1:])), precs
+
+
+def test_single_recording_detection():
+    rec = make_recording(seed=5, duration_s=0.6, n_rsos=2)
+    score = evaluate_detection(rec)
+    assert score.accuracy > 0.9
+    assert score.tp > 10
+
+
+def test_tracking_confirms_rsos_not_noise():
+    from repro.core.pipeline import run_recording
+
+    rec = make_recording(seed=9, duration_s=1.0, n_rsos=2)
+    cfg = PipelineConfig()
+    results = run_recording(rec, cfg, with_tracking=True)
+    final = results[-1].tracks
+    n_conf = int(np.asarray(confirmed(final, cfg.tracker)).sum())
+    assert 1 <= n_conf <= 4  # 2 objects; allow a transient ghost or merge

@@ -1,0 +1,105 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes/dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _coords(n, w=640, h=480):
+    return RNG.integers(0, w, n), RNG.integers(0, h, n)
+
+
+# ---------------------------------------------------------------------------
+# grid_quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 5, 250, 1024, 2500])
+@pytest.mark.parametrize("cell_size", [16, 32, 10, 7])
+def test_grid_quantize_matches_ref(n, cell_size):
+    x, y = _coords(n)
+    words = jnp.asarray((y.astype(np.uint32) << 16) | x.astype(np.uint32))
+    out = ops.grid_quantize_packed(words, cell_size)
+    expect = ref.grid_quantize_packed_ref(words, cell_size)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_grid_quantize_wire_format():
+    # x in low 16 bits, y in high 16 bits; output mirrors (paper Sec IV-B).
+    words = jnp.asarray([(7 << 16) | 33], jnp.uint32)  # y=7, x=33
+    out = int(ops.grid_quantize_packed(words, 16)[0])
+    assert out & 0xFFFF == 33 // 16
+    assert out >> 16 == 7 // 16
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(0, 639), st.integers(0, 479)),
+             min_size=1, max_size=300),
+    st.sampled_from([8, 16, 20, 64]),
+)
+def test_grid_quantize_property(coords, cell_size):
+    x = np.array([c[0] for c in coords], np.uint32)
+    y = np.array([c[1] for c in coords], np.uint32)
+    words = jnp.asarray((y << 16) | x)
+    out = np.asarray(ops.grid_quantize_packed(words, cell_size))
+    assert ((out & 0xFFFF) == x // cell_size).all()
+    assert ((out >> 16) == y // cell_size).all()
+
+
+# ---------------------------------------------------------------------------
+# cluster_accum (fused quantize+aggregate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [250, 256, 700, 1500])
+@pytest.mark.parametrize("cell_size,grid_w,grid_h", [(16, 40, 30), (32, 20, 15)])
+def test_cluster_accum_matches_ref(n, cell_size, grid_w, grid_h):
+    x, y = _coords(n)
+    t = RNG.uniform(0, 20000, n).astype(np.float32)
+    v = RNG.random(n) > 0.15
+    args = (jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32),
+            jnp.asarray(t), jnp.asarray(v))
+    kw = dict(cell_size=cell_size, grid_w=grid_w, grid_h=grid_h)
+    out = ops.cluster_accum(*args, **kw)
+    exp = ref.cluster_accum_ref(*args, **kw)
+    for a, b, name in zip(out, exp, ("count", "sx", "sy", "st")):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-3, err_msg=name
+        )
+
+
+def test_cluster_accum_total_count_conserved():
+    x, y = _coords(1000)
+    v = RNG.random(1000) > 0.5
+    count, *_ = ops.cluster_accum(
+        jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32),
+        jnp.zeros(1000, jnp.float32), jnp.asarray(v),
+        cell_size=16, grid_w=40, grid_h=30,
+    )
+    assert int(np.asarray(count).sum()) == int(v.sum())
+
+
+# ---------------------------------------------------------------------------
+# window_entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 4, 17])
+def test_window_entropy_matches_ref(k):
+    frame = jnp.asarray(RNG.random((480, 640)), jnp.float32)
+    cx = jnp.asarray(RNG.integers(0, 640, k), jnp.int32)
+    cy = jnp.asarray(RNG.integers(0, 480, k), jnp.int32)
+    out = ops.window_entropy(frame, cx, cy)
+    exp = ref.window_entropy_ref(frame, cx, cy)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-4, atol=1e-5)
+
+
+def test_window_entropy_constant_patch_is_zero():
+    frame = jnp.zeros((480, 640), jnp.float32)
+    out = np.asarray(ops.window_entropy(frame, jnp.asarray([100]), jnp.asarray([100])))
+    assert out[0, 0] == pytest.approx(0.0, abs=1e-5)  # shannon
+    assert out[2, 0] == pytest.approx(0.0, abs=1e-6)  # contrast
