@@ -1,0 +1,138 @@
+"""Loop vs scan vs vmapped-scan throughput (the dispatch-overhead story).
+
+The legacy driver pays a fresh trace+compile per recording plus one jit
+dispatch, host sync, and per-window host batching/transfer for every
+window; the scanned driver is memoized per config and pays one dispatch
+per recording. Both are measured as the public APIs ship; a steady-state
+loop row (process_window compiled once, held by the caller) isolates the
+per-window dispatch + host-sync cost from the re-jit cost. On a
+64-window synthetic recording the scan driver must clear >= 3x
+windows/sec over the legacy loop on CPU (ISSUE 1 acceptance); on
+accelerators the gap widens further.
+
+  PYTHONPATH=src python benchmarks/scan_throughput.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax
+import numpy as np
+from _common import time_fn
+
+from repro.core.events import pad_windows
+from repro.core.pipeline import (
+    PipelineConfig,
+    init_tracks,
+    make_scan_fn,
+    run_many_scan,
+    run_recording,
+    run_recording_scan,
+)
+from repro.data.synthetic import Recording, make_recording
+
+N_WINDOWS = 64
+N_SENSORS = 4
+
+
+def _recording_with_windows(n_windows: int, seed: int = 0) -> Recording:
+    """A synthetic recording truncated to exactly n_windows dual-threshold
+    windows."""
+    rec = make_recording(seed=seed, duration_s=3.0, n_rsos=2)
+    config = PipelineConfig()
+    windowed = pad_windows(rec.x, rec.y, rec.t, rec.p, config.batcher)
+    if windowed.num_windows < n_windows:
+        raise SystemExit(
+            f"recording too short: {windowed.num_windows} < {n_windows} windows"
+        )
+    cut = int(windowed.stops[n_windows - 1])
+    return Recording(
+        x=rec.x[:cut], y=rec.y[:cut], t=rec.t[:cut], p=rec.p[:cut],
+        kind=rec.kind[:cut], obj=rec.obj[:cut], rso_tracks=rec.rso_tracks,
+        duration_us=int(rec.t[cut - 1]), name=f"{rec.name}-{n_windows}w",
+    )
+
+
+def main() -> None:
+    config = PipelineConfig()
+    rec = _recording_with_windows(N_WINDOWS)
+    n_events = len(rec)
+    print(
+        f"backend={jax.default_backend()}  windows={N_WINDOWS}  "
+        f"events={n_events:,}  sensors(vmap)={N_SENSORS}"
+    )
+
+    # Legacy host loop as shipped: re-traces per call, one dispatch/window.
+    us_loop = time_fn(
+        lambda: run_recording(rec, config, with_tracking=True), warmup=1, iters=3
+    )
+
+    # Steady-state loop: caller holds the compiled window fn + tracker fn,
+    # paying only the per-window dispatch / host-sync / batching cost.
+    import functools
+
+    from repro.core.events import dual_threshold_batches
+    from repro.core.pipeline import make_process_window, tracker_step
+
+    process_window = make_process_window(config)
+    tracker_fn = jax.jit(functools.partial(tracker_step, config=config.tracker))
+
+    def steady_loop():
+        state = init_tracks(config.tracker)
+        out = []
+        for batch, sl in dual_threshold_batches(
+            rec.x, rec.y, rec.t, rec.p, config.batcher
+        ):
+            clusters, mets = process_window(batch)
+            state, _ = tracker_fn(state, clusters, mets["shannon_entropy"])
+            out.append(
+                (clusters, {k: np.asarray(v) for k, v in mets.items()}, state)
+            )
+        return out
+
+    us_steady = time_fn(steady_loop, iters=5)
+
+    # Scanned driver, end to end: host windowing + one compiled scan.
+    us_scan = time_fn(
+        lambda: run_recording_scan(rec, config, with_tracking=True).clusters.count,
+        iters=5,
+    )
+
+    # Device-only scan: windows prebuilt, pure compiled time.
+    windowed = pad_windows(rec.x, rec.y, rec.t, rec.p, config.batcher)
+    scan_fn = make_scan_fn(config, True)
+    init = init_tracks(config.tracker)
+    us_device = time_fn(lambda: scan_fn(windowed.batch, init), iters=10)
+
+    # Vmapped scan across N_SENSORS recordings (one dispatch total).
+    recs = [_recording_with_windows(N_WINDOWS, seed=s) for s in range(N_SENSORS)]
+    us_vmap = time_fn(
+        lambda: run_many_scan(recs, config)[-1].clusters.count, iters=5
+    )
+
+    def report(name: str, us: float, windows: int, events: int) -> None:
+        print(
+            f"{name:<28} {us / 1e3:9.2f} ms   "
+            f"{windows / (us * 1e-6):12,.0f} win/s   "
+            f"{events / (us * 1e-6):14,.0f} ev/s"
+        )
+
+    print(f"{'driver':<28} {'wall':>12}   {'windows/sec':>12}   {'events/sec':>14}")
+    report("loop (as shipped)", us_loop, N_WINDOWS, n_events)
+    report("loop (steady-state)", us_steady, N_WINDOWS, n_events)
+    report("scan (end-to-end)", us_scan, N_WINDOWS, n_events)
+    report("scan (pre-windowed)", us_device, N_WINDOWS, n_events)
+    report(
+        f"vmap scan x{N_SENSORS}",
+        us_vmap,
+        N_SENSORS * N_WINDOWS,
+        sum(len(r) for r in recs),
+    )
+    speedup = us_loop / us_scan
+    print(f"scan end-to-end speedup over loop: {speedup:.1f}x "
+          f"({'PASS' if speedup >= 3.0 else 'FAIL'} >= 3x acceptance)")
+
+
+if __name__ == "__main__":
+    main()

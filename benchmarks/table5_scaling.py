@@ -17,7 +17,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.events import EventBatch
 from repro.core.grid_clustering import GridConfig, grid_cluster
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, shard_map
 
 nodes, windows, cap = {nodes}, 32, 256
 mesh = make_mesh((nodes,), ("node",))
@@ -36,7 +36,7 @@ def node_fn(b):
     b = jax.tree.map(lambda a: a[0], b)
     return jax.vmap(lambda eb: grid_cluster(eb, grid).count)(b)[None]
 
-fn = jax.jit(jax.shard_map(node_fn, mesh=mesh,
+fn = jax.jit(shard_map(node_fn, mesh=mesh,
     in_specs=(jax.tree.map(lambda _: P("node"), batch),), out_specs=P("node")))
 fn(batch).block_until_ready()
 times = []

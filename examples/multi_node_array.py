@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.core.events import EventBatch  # noqa: E402
 from repro.core.grid_clustering import GridConfig, grid_cluster  # noqa: E402
 from repro.data.synthetic import make_recording  # noqa: E402
-from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.launch.mesh import make_mesh, shard_map  # noqa: E402
 
 
 def main() -> None:
@@ -77,7 +77,7 @@ def main() -> None:
             out = jax.vmap(lambda eb: grid_cluster(eb, grid).count)(b)
             return out[None]
 
-        return jax.shard_map(
+        return shard_map(
             node_fn, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("node"), batch),),
             out_specs=P("node"),

@@ -5,11 +5,18 @@ quantization (the FPGA IP core as a Pallas kernel / jnp), cluster
 formation with min_events=5, entropy metrics, and tracking — and prints
 the detections with their quality metrics.
 
+Uses the device-resident scan driver (``run_recording_scan``): the whole
+recording is windowed on host once, then conditioning -> clustering ->
+metrics -> tracking run as a single compiled ``lax.scan`` with one
+device dispatch. The legacy per-window loop (``run_recording``) produces
+identical results one window at a time — use it when events arrive as a
+live stream instead of a recorded file.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.pipeline import PipelineConfig, run_recording, evaluate_detection
+from repro.core.pipeline import PipelineConfig, run_recording_scan, evaluate_detection
 from repro.core.tracking import confirmed
 from repro.data.synthetic import make_recording
 
@@ -21,13 +28,14 @@ def main() -> None:
           f"/ {np.sum(rec.kind == 0):,} noise)")
 
     cfg = PipelineConfig()  # paper defaults: 16px cells, min_events=5
-    results = run_recording(rec, cfg, with_tracking=True)
-    print(f"Processed {len(results)} windows (20 ms / 250-event batches).")
+    result = run_recording_scan(rec, cfg, with_tracking=True)
+    print(f"Processed {result.num_windows} windows "
+          f"(20 ms / 250-event batches, one compiled scan).")
 
-    n_det = sum(int(r.clusters.num_valid()) for r in results)
+    n_det = int(np.asarray(result.clusters.valid).sum())
     print(f"Clusters passing min_events=5: {n_det}")
 
-    final = results[-1].tracks
+    final = result.final_tracks
     conf = np.asarray(confirmed(final, cfg.tracker))
     print(f"Confirmed tracks: {int(conf.sum())}")
     for i in np.flatnonzero(conf):

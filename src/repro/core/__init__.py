@@ -2,7 +2,9 @@
 from repro.core.events import (  # noqa: F401
     EventBatch,
     BatcherConfig,
+    WindowedEvents,
     dual_threshold_batches,
+    pad_windows,
     pack_words,
     unpack_words,
     roi_filter,
@@ -17,10 +19,19 @@ from repro.core.grid_clustering import (  # noqa: F401
     form_clusters,
 )
 from repro.core.pipeline import (  # noqa: F401
+    Candidates,
+    DetectionScore,
     PipelineConfig,
-    make_process_window,
-    run_recording,
+    ScanResult,
+    collect_candidates,
     evaluate_detection,
+    make_process_window,
+    make_scan_fn,
+    merge_candidates,
+    run_many_scan,
+    run_recording,
+    run_recording_scan,
+    score_threshold,
     threshold_sweep,
 )
 from repro.core.tracking import (  # noqa: F401

@@ -133,6 +133,29 @@ class BatcherConfig:
     capacity: int = DEFAULT_CAPACITY
 
 
+def dual_threshold_bounds(
+    t: np.ndarray, config: BatcherConfig = BatcherConfig()
+) -> list[tuple[int, int]]:
+    """Window boundaries (start, stop) under the dual-threshold policy.
+
+    Shared by the streaming batcher and :func:`pad_windows` so the host
+    loop and the device-resident scan see identical windows.
+    """
+    n = len(t)
+    bounds: list[tuple[int, int]] = []
+    start = 0
+    while start < n:
+        t0 = t[start]
+        # size cut
+        end_size = min(start + config.size_threshold, n)
+        # time cut: first index with t >= t0 + threshold
+        end_time = int(np.searchsorted(t, t0 + config.time_threshold_us, side="left"))
+        end = max(start + 1, min(end_size, end_time if end_time > start else end_size))
+        bounds.append((start, end))
+        start = end
+    return bounds
+
+
 def dual_threshold_batches(
     x: np.ndarray,
     y: np.ndarray,
@@ -147,21 +170,34 @@ def dual_threshold_batches(
     client policy. Yields ``(batch, slice_into_recording)`` so callers can
     recover per-event ground-truth labels.
     """
-    n = len(t)
-    start = 0
-    while start < n:
-        t0 = t[start]
-        # size cut
-        end_size = min(start + config.size_threshold, n)
-        # time cut: first index with t >= t0 + threshold
-        end_time = int(np.searchsorted(t, t0 + config.time_threshold_us, side="left"))
-        end = max(start + 1, min(end_size, end_time if end_time > start else end_size))
+    for start, end in dual_threshold_bounds(t, config):
         sl = slice(start, end)
         yield (
-            batch_from_arrays(x[sl], y[sl], t[sl] - t0, p[sl], config.capacity),
+            batch_from_arrays(x[sl], y[sl], t[sl] - t[start], p[sl], config.capacity),
             sl,
         )
-        start = end
+
+
+def stride_bounds(
+    t: np.ndarray, window_us: int = DEFAULT_TIME_THRESHOLD_US
+) -> list[tuple[int, int, int]]:
+    """Fixed-stride window boundaries ``(start, stop, window_t0_us)``.
+
+    Unlike the dual-threshold policy, stride windows are anchored to wall
+    time: a window may be empty and its origin is the stride start, not
+    the first event's timestamp.
+    """
+    if len(t) == 0:
+        return []
+    bounds: list[tuple[int, int, int]] = []
+    t_end = int(t[-1])
+    w0 = int(t[0])
+    while w0 <= t_end:
+        lo = int(np.searchsorted(t, w0, side="left"))
+        hi = int(np.searchsorted(t, w0 + window_us, side="left"))
+        bounds.append((lo, hi, w0))
+        w0 += window_us
+    return bounds
 
 
 def window_batches(
@@ -173,16 +209,93 @@ def window_batches(
     capacity: int = DEFAULT_CAPACITY,
 ) -> Iterator[tuple[EventBatch, slice]]:
     """Fixed-stride temporal windows (used by frame reconstruction/tracking)."""
-    if len(t) == 0:
-        return
-    t_end = int(t[-1])
-    w0 = int(t[0])
-    while w0 <= t_end:
-        lo = int(np.searchsorted(t, w0, side="left"))
-        hi = int(np.searchsorted(t, w0 + window_us, side="left"))
+    for lo, hi, w0 in stride_bounds(t, window_us):
         sl = slice(lo, hi)
         yield (
             batch_from_arrays(x[sl], y[sl], t[sl] - w0, p[sl], capacity),
             sl,
         )
-        w0 += window_us
+
+
+# ---------------------------------------------------------------------------
+# Device-resident windowing: the whole recording as one stacked pytree.
+# ---------------------------------------------------------------------------
+
+class WindowedEvents(NamedTuple):
+    """A full recording pre-windowed into a stacked, fixed-shape pytree.
+
+    ``batch`` leaves have shape (W, capacity) — one row per closed window,
+    padded with the validity mask — so the entire recording can be pushed
+    through a ``jax.lax.scan`` (or vmapped across recordings) with a single
+    device dispatch. Host-side bookkeeping (window start times and slice
+    boundaries into the original stream) rides along as numpy arrays for
+    ground-truth matching.
+    """
+
+    batch: EventBatch  # leaves (W, capacity)
+    t_start_us: np.ndarray  # (W,) int64 absolute window origin
+    starts: np.ndarray  # (W,) int64 slice start into the recording
+    stops: np.ndarray  # (W,) int64 slice stop (exclusive)
+
+    @property
+    def num_windows(self) -> int:
+        return self.batch.x.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.batch.x.shape[-1]
+
+
+def pad_windows(
+    x: np.ndarray,
+    y: np.ndarray,
+    t: np.ndarray,
+    p: np.ndarray,
+    config: BatcherConfig = BatcherConfig(),
+    policy: str = "dual",
+    window_us: int | None = None,
+) -> WindowedEvents:
+    """Slice a time-sorted recording into a (W, capacity) stacked EventBatch.
+
+    ``policy="dual"`` reproduces :func:`dual_threshold_batches` windows
+    bit-for-bit (same boundaries, same relative timestamps, same
+    capacity truncation); ``policy="stride"`` reproduces
+    :func:`window_batches`. The result feeds ``run_recording_scan``:
+    one device transfer in, one compiled scan over the W axis, one
+    transfer out.
+    """
+    x = np.asarray(x)
+    y = np.asarray(y)
+    t = np.asarray(t)
+    p = np.asarray(p)
+    if policy == "dual":
+        bounds = [(s, e, int(t[s])) for s, e in dual_threshold_bounds(t, config)]
+    elif policy == "stride":
+        bounds = stride_bounds(t, window_us or config.time_threshold_us)
+    else:
+        raise ValueError(f"unknown windowing policy: {policy!r}")
+
+    w = len(bounds)
+    cap = config.capacity
+    bx = np.zeros((w, cap), np.int32)
+    by = np.zeros((w, cap), np.int32)
+    bt = np.zeros((w, cap), np.int32)
+    bp = np.zeros((w, cap), np.int32)
+    bv = np.zeros((w, cap), bool)
+    t_start = np.zeros((w,), np.int64)
+    starts = np.zeros((w,), np.int64)
+    stops = np.zeros((w,), np.int64)
+    for i, (s, e, t0) in enumerate(bounds):
+        n = min(e - s, cap)
+        bx[i, :n] = x[s : s + n]
+        by[i, :n] = y[s : s + n]
+        bt[i, :n] = t[s : s + n] - t0
+        bp[i, :n] = p[s : s + n]
+        bv[i, :n] = True
+        t_start[i], starts[i], stops[i] = t0, s, e
+
+    batch = EventBatch(
+        jnp.asarray(bx), jnp.asarray(by), jnp.asarray(bt), jnp.asarray(bp),
+        jnp.asarray(bv),
+    )
+    return WindowedEvents(batch, t_start, starts, stops)

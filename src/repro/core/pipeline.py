@@ -8,17 +8,27 @@ Stages, matching the paper's data flow:
     -> min_events threshold + metrics
     -> tracking (spatial-coherence validation)
 
-``process_window`` is the jit'd per-window function;
-``run_recording`` drives it with the dual-threshold batcher and scans the
-tracker across windows; ``evaluate_detection`` scores accuracy against
-ground truth exactly as the paper does (sampled detections manually
-verified -> here verified against simulator truth).
+Two drivers share one per-window core:
+
+* ``run_recording`` — the legacy host loop: dual-threshold batching with
+  one jit dispatch (and host sync) per window. Kept as the streaming
+  reference — it is what a live sensor feed looks like.
+* ``run_recording_scan`` — the device-resident path: ``pad_windows``
+  stacks the whole recording into a (W, capacity) pytree, and a single
+  ``jax.lax.scan`` runs conditioning -> histogram -> clustering ->
+  metrics -> tracking over all windows in one dispatch, mirroring the
+  FPGA's free-running stream. ``run_many_scan`` vmaps that scan over a
+  batch of recordings (multi-sensor / multi-recording throughput).
+
+``evaluate_detection`` scores accuracy against ground truth exactly as
+the paper does (sampled detections verified against simulator truth);
+candidate collection is vectorized over the stacked scan outputs.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +39,9 @@ from repro.core.events import (
     DEFAULT_ROI,
     BatcherConfig,
     EventBatch,
+    WindowedEvents,
     dual_threshold_batches,
+    pad_windows,
     persistent_event_filter,
     roi_filter,
 )
@@ -65,7 +77,9 @@ def _histogram_fn(config: PipelineConfig) -> Callable[[EventBatch], tuple]:
         from repro.kernels import ops as kops
 
         def fn(batch: EventBatch):
-            return kops.cluster_accum(
+            # Trace-time call (no nested jit): shapes are static inside
+            # both the per-window jit and the scan body.
+            return kops.cluster_accum_call(
                 batch.x, batch.y, batch.t, batch.valid,
                 cell_size=config.grid.cell_size,
                 grid_w=config.grid.grid_w,
@@ -76,21 +90,34 @@ def _histogram_fn(config: PipelineConfig) -> Callable[[EventBatch], tuple]:
     return lambda batch: cell_histogram(batch, config.grid)
 
 
+def _window_core(
+    config: PipelineConfig, hist_fn: Callable[[EventBatch], tuple], batch: EventBatch
+) -> tuple[Clusters, dict[str, jax.Array]]:
+    """The per-window computation shared by the loop and scan drivers."""
+    batch = roi_filter(batch, config.roi)
+    batch = persistent_event_filter(batch, config.hot_pixel_max)
+    count, sx, sy, st = hist_fn(batch)
+    clusters = clusters_from_histogram(count, sx, sy, st, config.grid)
+    if config.merge_neighbors:
+        clusters = merge_adjacent(clusters, config.grid)
+    frame = M.reconstruct_frame(batch, config.grid.width, config.grid.height)
+    mets = M.cluster_metrics(frame, clusters)
+    return clusters, mets
+
+
 def make_process_window(config: PipelineConfig = PipelineConfig()):
-    """Build the jit'd per-window stage: conditioning -> clusters -> metrics."""
+    """Build the jit'd per-window stage: conditioning -> clusters -> metrics.
+
+    Note: each call returns a fresh jit closure, so a caller that rebuilds
+    it per recording re-traces and re-compiles — that is part of the
+    legacy loop driver's cost profile. The scanned driver
+    (:func:`make_scan_fn`) is memoized per config instead.
+    """
     hist_fn = _histogram_fn(config)
 
     @jax.jit
     def process_window(batch: EventBatch) -> tuple[Clusters, dict[str, jax.Array]]:
-        batch = roi_filter(batch, config.roi)
-        batch = persistent_event_filter(batch, config.hot_pixel_max)
-        count, sx, sy, st = hist_fn(batch)
-        clusters = clusters_from_histogram(count, sx, sy, st, config.grid)
-        if config.merge_neighbors:
-            clusters = merge_adjacent(clusters, config.grid)
-        frame = M.reconstruct_frame(batch, config.grid.width, config.grid.height)
-        mets = M.cluster_metrics(frame, clusters)
-        return clusters, mets
+        return _window_core(config, hist_fn, batch)
 
     return process_window
 
@@ -108,9 +135,13 @@ def run_recording(
     config: PipelineConfig = PipelineConfig(),
     with_tracking: bool = True,
 ) -> list[WindowResult]:
-    """Host driver: dual-threshold batching + jit'd window stage + tracker."""
+    """Host driver: dual-threshold batching + jit'd window stage + tracker.
+
+    One dispatch per window; see :func:`run_recording_scan` for the
+    device-resident path with one dispatch per recording.
+    """
     process_window = make_process_window(config)
-    tracker_fn = jax.jit(partial(tracker_step, config=config.tracker))
+    tracker_fn = jax.jit(functools.partial(tracker_step, config=config.tracker))
     state = init_tracks(config.tracker)
     results: list[WindowResult] = []
     for batch, sl in dual_threshold_batches(
@@ -125,6 +156,182 @@ def run_recording(
                 clusters=clusters,
                 metrics={k: np.asarray(v) for k, v in mets.items()},
                 tracks=state if with_tracking else None,
+            )
+        )
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Device-resident scanned pipeline (one dispatch per recording).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScanResult:
+    """Stacked outputs of the scanned pipeline.
+
+    ``clusters`` leaves and ``metrics`` values have shape (W, K);
+    ``tracks`` leaves (when tracking is on) have shape (W, T) — the
+    tracker state *after* each window. Everything stays on device until
+    the caller converts it; ``window_results()`` materializes the legacy
+    per-window list for drop-in comparisons.
+    """
+
+    t_start_us: np.ndarray  # (W,) int64
+    clusters: Clusters  # leaves (W, K)
+    metrics: dict[str, jax.Array]  # (W, K)
+    tracks: TrackState | None  # leaves (W, T)
+    final_tracks: TrackState | None
+    windows: WindowedEvents
+
+    @property
+    def num_windows(self) -> int:
+        return int(self.t_start_us.shape[0])
+
+    def window_results(self) -> list[WindowResult]:
+        mets_np = {k: np.asarray(v) for k, v in self.metrics.items()}
+        out: list[WindowResult] = []
+        for w in range(self.num_windows):
+            out.append(
+                WindowResult(
+                    t_start_us=int(self.t_start_us[w]),
+                    clusters=jax.tree.map(lambda a: a[w], self.clusters),
+                    metrics={k: v[w] for k, v in mets_np.items()},
+                    tracks=(
+                        jax.tree.map(lambda a: a[w], self.tracks)
+                        if self.tracks is not None
+                        else None
+                    ),
+                )
+            )
+        return out
+
+
+def _make_scan_core(config: PipelineConfig, with_tracking: bool):
+    """Plain (un-jitted) scan function; jit/vmap wrappers are layered on top."""
+    hist_fn = _histogram_fn(config)
+
+    def scan_core(stacked: EventBatch, state: TrackState):
+        def step(carry, batch):
+            clusters, mets = _window_core(config, hist_fn, batch)
+            if with_tracking:
+                carry, _ = tracker_step(
+                    carry, clusters, mets["shannon_entropy"], config.tracker
+                )
+            return carry, (clusters, mets, carry)
+
+        final, (clusters, mets, states) = jax.lax.scan(step, state, stacked)
+        return final, clusters, mets, states
+
+    return scan_core
+
+
+@functools.lru_cache(maxsize=None)
+def make_scan_fn(config: PipelineConfig = PipelineConfig(), with_tracking: bool = True):
+    """Jit'd whole-recording scan: (stacked EventBatch, init TrackState) ->
+    (final TrackState, stacked Clusters, stacked metrics, stacked TrackState).
+
+    Compiled once per (config, window count, capacity); cached per config.
+    """
+    return jax.jit(_make_scan_core(config, with_tracking))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_many_scan_fn(config: PipelineConfig, with_tracking: bool):
+    core = _make_scan_core(config, with_tracking)
+    # Map over the recording axis; broadcast the (fresh) tracker state.
+    return jax.jit(jax.vmap(core, in_axes=(0, None)))
+
+
+def run_recording_scan(
+    recording: Recording,
+    config: PipelineConfig = PipelineConfig(),
+    with_tracking: bool = True,
+    windows: WindowedEvents | None = None,
+) -> ScanResult:
+    """Device-resident driver: the whole recording in one ``lax.scan``.
+
+    Windows are identical to :func:`run_recording`'s dual-threshold
+    batches (same boundaries, same padding), but the per-window stage and
+    the tracker run inside a single compiled scan — one host->device
+    transfer in, one device->host sync out, no per-window dispatch.
+    Pass a precomputed ``windows`` (from :func:`pad_windows`) to skip the
+    host windowing pass, e.g. when sweeping configs over one recording.
+    """
+    if windows is None:
+        windows = pad_windows(
+            recording.x, recording.y, recording.t, recording.p, config.batcher
+        )
+    scan_fn = make_scan_fn(config, with_tracking)
+    final, clusters, mets, states = scan_fn(windows.batch, init_tracks(config.tracker))
+    return ScanResult(
+        t_start_us=windows.t_start_us,
+        clusters=clusters,
+        metrics=mets,
+        tracks=states if with_tracking else None,
+        final_tracks=final if with_tracking else None,
+        windows=windows,
+    )
+
+
+def run_many_scan(
+    recordings: list[Recording],
+    config: PipelineConfig = PipelineConfig(),
+    with_tracking: bool = True,
+) -> list[ScanResult]:
+    """Vmapped scan over a batch of recordings (multi-sensor throughput).
+
+    Recordings are windowed on host, right-padded with empty (all-invalid)
+    windows to a common window count, stacked to (R, W, capacity) leaves,
+    and pushed through ``vmap(scan)`` in a single dispatch. Results are
+    split back per recording and trimmed to each one's true window count.
+    """
+    if not recordings:
+        return []
+    windowed = [
+        pad_windows(r.x, r.y, r.t, r.p, config.batcher) for r in recordings
+    ]
+    w_max = max(w.num_windows for w in windowed)
+
+    def pad_leaf(a: jax.Array) -> jax.Array:
+        pad = w_max - a.shape[0]
+        if pad == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
+        )
+
+    stacked = EventBatch(
+        *[
+            jnp.stack([pad_leaf(getattr(w.batch, f)) for w in windowed])
+            for f in EventBatch._fields
+        ]
+    )
+    many_fn = _make_many_scan_fn(config, with_tracking)
+    _, clusters, mets, states = many_fn(stacked, init_tracks(config.tracker))
+    results: list[ScanResult] = []
+    for r, w in enumerate(windowed):
+        n = w.num_windows
+        if not with_tracking:
+            final_r = None
+        elif n == 0:
+            final_r = init_tracks(config.tracker)
+        else:
+            # The scan carry after w_max windows has coasted through this
+            # recording's padded (all-invalid) tail; the true final state
+            # is the per-window state at its last real window.
+            final_r = jax.tree.map(lambda a: a[r, n - 1], states)
+        results.append(
+            ScanResult(
+                t_start_us=w.t_start_us,
+                clusters=jax.tree.map(lambda a: a[r, :n], clusters),
+                metrics={k: v[r, :n] for k, v in mets.items()},
+                tracks=(
+                    jax.tree.map(lambda a: a[r, :n], states)
+                    if with_tracking
+                    else None
+                ),
+                final_tracks=final_r,
+                windows=w,
             )
         )
     return results
@@ -157,17 +364,6 @@ class DetectionScore:
         return self.tp / d if d else 0.0
 
 
-def _cluster_truth(
-    recording: Recording, t_us: float, cx: float, cy: float, radius: float = 14.0
-) -> bool:
-    """Is there a true RSO within ``radius`` px of (cx, cy) at time t?"""
-    for r in range(recording.rso_tracks.shape[0]):
-        px, py = recording.rso_position(r, np.array([t_us]))
-        if np.hypot(px[0] - cx, py[0] - cy) <= radius:
-            return True
-    return False
-
-
 @dataclasses.dataclass
 class Candidates:
     """Pipeline outputs collected once; thresholds are swept afterwards.
@@ -187,7 +383,6 @@ class Candidates:
     is_rso: np.ndarray  # (C,) bool
     object_best: np.ndarray  # (V,) best matched count per visible-object-window
 
-
 def collect_candidates(
     recording: Recording,
     config: PipelineConfig = PipelineConfig(),
@@ -196,7 +391,96 @@ def collect_candidates(
     gate_px: float = 14.0,
     min_truth_events: int = 3,
 ) -> Candidates:
-    """Run the pipeline ONCE over a recording and collect candidates."""
+    """Run the scanned pipeline ONCE over a recording and collect candidates.
+
+    Truth matching is vectorized: RSO trajectory positions are evaluated
+    for every (window, cluster slot, object) triple in one numpy pass
+    instead of the per-cluster Python loop of
+    :func:`collect_candidates_loop` (kept as the reference oracle).
+    Ordering, ``max_samples`` truncation, and object-level bookkeeping
+    match the loop exactly.
+    """
+    from repro.data.synthetic import KIND_RSO
+
+    floor_grid = dataclasses.replace(config.grid, min_events=candidate_floor)
+    floor_cfg = dataclasses.replace(config, grid=floor_grid)
+    result = run_recording_scan(recording, floor_cfg, with_tracking=False)
+    windows = result.windows
+
+    counts = np.asarray(result.clusters.count)  # (W, K)
+    valid = np.asarray(result.clusters.valid)
+    cx = np.asarray(result.clusters.centroid_x, np.float64)
+    cy = np.asarray(result.clusters.centroid_y, np.float64)
+    ct = np.asarray(result.clusters.centroid_t, np.float64)
+    w_count, k = counts.shape if counts.ndim == 2 else (0, 0)
+
+    tracks = np.asarray(recording.rso_tracks, np.float64).reshape(-1, 4)
+    n_rso = tracks.shape[0]
+
+    # Cluster-level: match every (window, slot) centroid against every RSO
+    # trajectory at the cluster's mean event time.
+    t_ev = windows.t_start_us[:, None].astype(np.float64) + ct  # (W, K)
+    ts = t_ev[:, :, None] * 1e-6  # seconds, (W, K, 1)
+    px = tracks[None, None, :, 0] + tracks[None, None, :, 2] * ts  # (W, K, R)
+    py = tracks[None, None, :, 1] + tracks[None, None, :, 3] * ts
+    matched = (
+        np.hypot(px - cx[:, :, None], py - cy[:, :, None]) <= gate_px
+    )  # (W, K, R)
+
+    # Candidate ordering is window-major, slot order — same as the loop.
+    flat_valid = valid.reshape(-1)
+    if max_samples is None:
+        keep_flat = flat_valid
+    else:
+        rank = np.cumsum(flat_valid) - 1
+        keep_flat = flat_valid & (rank < max_samples)
+    keep = keep_flat.reshape(w_count, k)
+    counts_out = counts.reshape(-1)[keep_flat].astype(np.int32)
+    is_rso = matched.any(axis=-1).reshape(-1)[keep_flat]
+
+    # Object-level: per (window, RSO) visible pair, the best matched count
+    # among kept clusters. Visibility = >= min_truth_events true RSO events
+    # inside the window's slice of the recording.
+    n_true = np.zeros((w_count, n_rso), np.int64)
+    rso_ev = np.flatnonzero(np.asarray(recording.kind) == KIND_RSO)
+    if rso_ev.size and w_count:
+        # Dual-threshold windows partition the stream: event e lands in the
+        # window whose stop is the first one strictly past e. Events past
+        # the last stop (none, by construction) are dropped defensively.
+        ev_w = np.searchsorted(windows.stops, rso_ev, side="right")
+        in_range = ev_w < w_count
+        np.add.at(
+            n_true,
+            (ev_w[in_range], np.asarray(recording.obj)[rso_ev[in_range]]),
+            1,
+        )
+    visible = n_true >= min_truth_events  # (W, R)
+    contrib = np.where(
+        matched & keep[:, :, None], counts[:, :, None], 0
+    )  # (W, K, R)
+    best = contrib.max(axis=1) if k else np.zeros((w_count, n_rso), counts.dtype)
+    object_best = best[visible]
+
+    return Candidates(
+        counts_out,
+        np.asarray(is_rso, bool),
+        np.asarray(object_best, np.int32),
+    )
+
+
+def collect_candidates_loop(
+    recording: Recording,
+    config: PipelineConfig = PipelineConfig(),
+    candidate_floor: int = 2,
+    max_samples: int | None = None,
+    gate_px: float = 14.0,
+    min_truth_events: int = 3,
+) -> Candidates:
+    """Legacy per-window/per-cluster Python loop (reference oracle).
+
+    Semantically identical to :func:`collect_candidates`; kept so the
+    vectorized path stays testable against first-principles code.
+    """
     from repro.data.synthetic import KIND_RSO
 
     floor_grid = dataclasses.replace(config.grid, min_events=candidate_floor)
@@ -205,10 +489,9 @@ def collect_candidates(
     counts_out: list[int] = []
     truth_out: list[bool] = []
     object_best: list[int] = []
-    n_rso = recording.rso_tracks.shape[0]
-    from repro.core.events import dual_threshold_batches as _batches
+    n_rso = np.asarray(recording.rso_tracks).reshape(-1, 4).shape[0]
 
-    for batch, sl in _batches(
+    for batch, sl in dual_threshold_batches(
         recording.x, recording.y, recording.t, recording.p, floor_cfg.batcher
     ):
         clusters, _ = process_window(batch)
@@ -218,7 +501,6 @@ def collect_candidates(
         cys = np.asarray(clusters.centroid_y)
         cts = np.asarray(clusters.centroid_t)
         t0 = float(recording.t[sl.start])
-        t_mid = t0 + 0.5 * float(recording.t[sl.stop - 1] - recording.t[sl.start])
         # Object-level bookkeeping: best matched count per visible RSO.
         kinds = recording.kind[sl]
         objs = recording.obj[sl]
@@ -291,8 +573,9 @@ def threshold_sweep(
 ) -> dict[int, DetectionScore]:
     """Accuracy vs min_events across a validation suite (paper Fig. 10b).
 
-    The pipeline runs ONCE per recording; thresholds are swept over the
-    collected candidates (the O(n) single-pass property in action).
+    The scanned pipeline runs ONCE per recording (one dispatch each);
+    thresholds are swept over the collected candidates (the O(n)
+    single-pass property in action).
     """
     cand = merge_candidates(
         [

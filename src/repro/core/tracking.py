@@ -152,11 +152,16 @@ def track_recording(
     clusters_seq: Clusters,
     entropy_seq: jax.Array,
     config: TrackerConfig = TrackerConfig(),
+    init: TrackState | None = None,
 ) -> tuple[TrackState, TrackState]:
     """Scan the tracker over a stacked sequence of per-window clusters.
 
     ``clusters_seq`` leaves have shape (W, K); ``entropy_seq`` is (W, K).
-    Returns (final_state, per-window stacked states).
+    ``init`` seeds the carry (defaults to empty tracks) so scans can be
+    chained across recording segments. Returns (final_state, per-window
+    stacked states). ``TrackState`` is a flat pytree of (T,) leaves, so it
+    is a valid ``lax.scan`` carry as-is — ``run_recording_scan`` threads it
+    through the full conditioning -> clustering -> metrics scan body.
     """
 
     def step(state, inp):
@@ -164,4 +169,7 @@ def track_recording(
         new, _ = tracker_step(state, cl, ent, config)
         return new, new
 
-    return jax.lax.scan(step, init_tracks(config), (clusters_seq, entropy_seq))
+    return jax.lax.scan(
+        step, init_tracks(config) if init is None else init,
+        (clusters_seq, entropy_seq),
+    )

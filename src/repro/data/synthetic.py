@@ -121,7 +121,9 @@ def make_recording(
         objs.append(np.full(n, s))
 
     # --- RSOs --------------------------------------------------------------
-    tracks = np.zeros((max(n_rsos, 1), 4), np.float64)
+    # (n_rsos, 4): a zero-RSO recording gets an empty (0, 4) track table so
+    # accuracy scoring sees no phantom object at the origin.
+    tracks = np.zeros((n_rsos, 4), np.float64)
     for r in range(n_rsos):
         speed = rng.uniform(*rso_speed_px_s) * scale  # px/s apparent
         angle = rng.uniform(0, 2 * np.pi)

@@ -48,8 +48,7 @@ def grid_quantize_packed(
     return out.reshape(-1)[:n]
 
 
-@partial(jax.jit, static_argnames=("cell_size", "grid_w", "grid_h", "interpret"))
-def cluster_accum(
+def cluster_accum_call(
     x: jax.Array,
     y: jax.Array,
     t: jax.Array,
@@ -60,7 +59,13 @@ def cluster_accum(
     grid_h: int,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Fused quantize + per-cell count/centroid accumulation."""
+    """Trace-time fused quantize + per-cell count/centroid accumulation.
+
+    No jit wrapper: all shapes (event count, pad amount, grid) are static
+    at trace time, so this is safe to call inside an enclosing ``jax.jit``
+    or a ``lax.scan`` body (the scanned pipeline path) without nesting a
+    dispatch boundary per window.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     n = x.shape[0]
     n_pad = -(-n // _ca.EVENT_TILE) * _ca.EVENT_TILE
@@ -74,6 +79,15 @@ def cluster_accum(
         grid_h=grid_h,
         interpret=interpret,
     )
+
+
+cluster_accum = jax.jit(
+    cluster_accum_call,
+    static_argnames=("cell_size", "grid_w", "grid_h", "interpret"),
+)
+cluster_accum.__doc__ = (
+    "Jit'd entry point for host callers; see :func:`cluster_accum_call`."
+)
 
 
 @partial(jax.jit, static_argnames=("window", "bins", "interpret"))

@@ -6,19 +6,38 @@ module never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.4.35-ish; older releases have no explicit axis types
+    from jax.sharding import AxisType
+
+    _AXIS_KW = lambda n: {"axis_types": (AxisType.Auto,) * n}  # noqa: E731
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AXIS_KW = lambda n: {}  # noqa: E731
+
+try:  # jax >= 0.6 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh``: jax.set_mesh on new jax,
+    the Mesh object's own context manager on older releases."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **_AXIS_KW(len(shape)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh helper for tests/examples (e.g. (8,) 'node' arrays)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **_AXIS_KW(len(shape)))
 
 
 # TPU v5e-like hardware constants for the roofline model.

@@ -1,0 +1,77 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``st``
+are re-exported unchanged. When it is missing (it is an optional extra,
+not a tier-1 dependency) a tiny deterministic fallback runs each property
+test over ``max_examples`` seeded random draws instead of skipping it —
+less adversarial than hypothesis (no shrinking, no edge-case bias) but
+the invariants still get exercised.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by which path CI installs
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    from types import SimpleNamespace
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+    def _lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda rng: [
+                elements.example(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))
+            ]
+        )
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    st = SimpleNamespace(
+        integers=_integers,
+        tuples=_tuples,
+        lists=_lists,
+        sampled_from=_sampled_from,
+    )
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # No functools.wraps: the wrapper must present a zero-arg
+            # signature or pytest asks for the drawn params as fixtures.
+            def wrapper():
+                rng = np.random.default_rng(0xE7A5)
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    fn(*(s.example(rng) for s in strategies))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

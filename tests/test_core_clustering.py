@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core.baselines import dbscan, dbscan_centroids, kmeans
 from repro.core.events import (

@@ -1,0 +1,114 @@
+"""Candidate collection / threshold scoring: vectorized-vs-loop
+equivalence and edge cases (empty stream, zero RSOs, truncation)."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    Candidates,
+    PipelineConfig,
+    collect_candidates,
+    collect_candidates_loop,
+    merge_candidates,
+    score_threshold,
+)
+from repro.data.synthetic import Recording, make_recording
+
+
+@pytest.fixture(scope="module")
+def recording():
+    return make_recording(seed=5, duration_s=0.4, n_rsos=2)
+
+
+def _empty_recording() -> Recording:
+    z = np.zeros(0, np.int32)
+    return Recording(
+        x=z, y=z, t=np.zeros(0, np.int64), p=z, kind=z, obj=z,
+        rso_tracks=np.zeros((0, 4)), duration_us=0, name="empty",
+    )
+
+
+def _assert_candidates_equal(a: Candidates, b: Candidates):
+    np.testing.assert_array_equal(a.counts, b.counts)
+    np.testing.assert_array_equal(a.is_rso, b.is_rso)
+    np.testing.assert_array_equal(a.object_best, b.object_best)
+
+
+def test_vectorized_matches_loop(recording):
+    cfg = PipelineConfig()
+    _assert_candidates_equal(
+        collect_candidates(recording, cfg), collect_candidates_loop(recording, cfg)
+    )
+
+
+def test_vectorized_matches_loop_with_max_samples(recording):
+    cfg = PipelineConfig()
+    for max_samples in (0, 7, 40):
+        a = collect_candidates(recording, cfg, max_samples=max_samples)
+        b = collect_candidates_loop(recording, cfg, max_samples=max_samples)
+        assert len(a.counts) == min(max_samples, len(collect_candidates(recording, cfg).counts))
+        _assert_candidates_equal(a, b)
+
+
+def test_empty_recording_yields_empty_candidates():
+    cand = collect_candidates(_empty_recording(), PipelineConfig())
+    assert cand.counts.shape == (0,)
+    assert cand.is_rso.shape == (0,)
+    assert cand.object_best.shape == (0,)
+    score = score_threshold(cand, 5)
+    assert (score.tp, score.fp, score.fn, score.tn) == (0, 0, 0, 0)
+    assert score.accuracy == 0.0
+    assert score.precision == 0.0 and score.recall == 0.0
+
+
+def test_zero_rso_recording_has_no_fn_inflation():
+    rec = make_recording(seed=4, duration_s=0.3, n_rsos=0)
+    assert rec.rso_tracks.shape == (0, 4)
+    cand = collect_candidates(rec, PipelineConfig())
+    # Stars/noise still produce candidates, but none match an RSO and no
+    # phantom object-level misses appear at any threshold.
+    assert len(cand.counts) > 0
+    assert not cand.is_rso.any()
+    assert cand.object_best.shape == (0,)
+    for thr in (2, 5, 10):
+        assert score_threshold(cand, thr).fn == 0
+    assert score_threshold(cand, 5).tp == 0
+
+
+def test_max_samples_truncation_cap(recording):
+    full = collect_candidates(recording, PipelineConfig())
+    cap = len(full.counts) // 2
+    truncated = collect_candidates(recording, PipelineConfig(), max_samples=cap)
+    assert len(truncated.counts) == cap
+    # Truncation keeps the window-major prefix of the full candidate list.
+    np.testing.assert_array_equal(truncated.counts, full.counts[:cap])
+    np.testing.assert_array_equal(truncated.is_rso, full.is_rso[:cap])
+
+
+def test_merge_candidates_empty_list():
+    merged = merge_candidates([])
+    assert merged.counts.shape == (0,)
+    assert merged.is_rso.shape == (0,)
+    assert merged.object_best.shape == (0,)
+    assert score_threshold(merged, 5).accuracy == 0.0
+
+
+def test_merge_candidates_concatenates(recording):
+    cand = collect_candidates(recording, PipelineConfig())
+    merged = merge_candidates([cand, cand])
+    assert len(merged.counts) == 2 * len(cand.counts)
+    s1, s2 = score_threshold(cand, 5), score_threshold(merged, 5)
+    assert (s2.tp, s2.fp, s2.fn, s2.tn) == (2 * s1.tp, 2 * s1.fp, 2 * s1.fn, 2 * s1.tn)
+
+
+def test_score_threshold_known_values():
+    cand = Candidates(
+        counts=np.array([1, 4, 5, 9], np.int32),
+        is_rso=np.array([False, True, True, False]),
+        object_best=np.array([4, 9], np.int32),
+    )
+    s = score_threshold(cand, 5)
+    assert s.tp == 1  # count 5 RSO passes
+    assert s.fp == 1  # count 9 non-RSO passes
+    assert s.fn == 1  # object_best 4 below threshold
+    assert s.tn == 1  # count 1 non-RSO rejected
+    assert s.accuracy == pytest.approx(0.5)

@@ -1,10 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
-swept over shapes/dtypes, plus hypothesis property tests."""
+swept over shapes/dtypes, plus hypothesis property tests (deterministic
+fallback when hypothesis isn't installed; see tests/_hyp.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.kernels import ops, ref
 

@@ -1,0 +1,239 @@
+"""Device-resident scanned pipeline: pad_windows invariants and
+scan-vs-loop equivalence (bit-for-bit, both histogram paths)."""
+import numpy as np
+import pytest
+
+from repro.core.events import (
+    BatcherConfig,
+    dual_threshold_batches,
+    pad_windows,
+    window_batches,
+)
+from repro.core.pipeline import (
+    PipelineConfig,
+    run_many_scan,
+    run_recording,
+    run_recording_scan,
+)
+from repro.data.synthetic import Recording, make_recording, make_validation_suite
+
+
+@pytest.fixture(scope="module")
+def recording():
+    return make_recording(seed=3, duration_s=0.4, n_rsos=2)
+
+
+@pytest.fixture(scope="module")
+def suite():
+    # One recording per lens configuration, short for test speed.
+    return make_validation_suite(n_recordings=1, duration_s=0.4)
+
+
+def _empty_recording() -> Recording:
+    z = np.zeros(0, np.int32)
+    return Recording(
+        x=z, y=z, t=np.zeros(0, np.int64), p=z, kind=z, obj=z,
+        rso_tracks=np.zeros((0, 4)), duration_us=0, name="empty",
+    )
+
+
+# ---------------------------------------------------------------------------
+# pad_windows
+# ---------------------------------------------------------------------------
+
+def test_pad_windows_matches_batcher_windows(recording):
+    cfg = BatcherConfig()
+    windowed = pad_windows(recording.x, recording.y, recording.t, recording.p, cfg)
+    batches = list(
+        dual_threshold_batches(recording.x, recording.y, recording.t, recording.p, cfg)
+    )
+    assert windowed.num_windows == len(batches)
+    for w, (batch, sl) in enumerate(batches):
+        assert windowed.starts[w] == sl.start
+        assert windowed.stops[w] == sl.stop
+        assert windowed.t_start_us[w] == recording.t[sl.start]
+        for field in batch._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(windowed.batch, field)[w]),
+                np.asarray(getattr(batch, field)),
+                err_msg=field,
+            )
+
+
+def test_pad_windows_events_conserved(recording):
+    cfg = BatcherConfig()
+    windowed = pad_windows(recording.x, recording.y, recording.t, recording.p, cfg)
+    # Dual-threshold windows close at <= size_threshold <= capacity events,
+    # so no window truncates and every event lands in exactly one row.
+    assert int(np.asarray(windowed.batch.valid).sum()) == len(recording)
+    # Slices partition the stream in order.
+    assert windowed.starts[0] == 0
+    assert windowed.stops[-1] == len(recording)
+    np.testing.assert_array_equal(windowed.starts[1:], windowed.stops[:-1])
+
+
+def test_pad_windows_last_partial_window():
+    # 260 events, 1 us apart: windows of 250 then a partial 10-event window.
+    n = 260
+    t = np.arange(n, dtype=np.int64)
+    z = np.zeros(n, np.int32)
+    windowed = pad_windows(z, z, t, z, BatcherConfig())
+    assert windowed.num_windows == 2
+    valid = np.asarray(windowed.batch.valid)
+    assert int(valid[0].sum()) == 250
+    assert int(valid[1].sum()) == 10
+    # Relative timestamps restart at each window's first event.
+    bt = np.asarray(windowed.batch.t)
+    assert bt[1, 0] == 0 and bt[1, 9] == 9
+
+
+def test_pad_windows_stride_policy_matches_window_batches(recording):
+    cap = 512
+    cfg = BatcherConfig(capacity=cap)
+    windowed = pad_windows(
+        recording.x, recording.y, recording.t, recording.p, cfg, policy="stride"
+    )
+    batches = list(
+        window_batches(
+            recording.x, recording.y, recording.t, recording.p, capacity=cap
+        )
+    )
+    assert windowed.num_windows == len(batches)
+    for w, (batch, _) in enumerate(batches):
+        for field in batch._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(windowed.batch, field)[w]),
+                np.asarray(getattr(batch, field)),
+                err_msg=field,
+            )
+
+
+def test_pad_windows_stride_truncates_at_capacity():
+    # 100 events in one 20 ms stride window but capacity 16 -> truncated row.
+    n = 100
+    t = np.arange(n, dtype=np.int64) * 100
+    z = np.zeros(n, np.int32)
+    windowed = pad_windows(z, z, t, z, BatcherConfig(capacity=16), policy="stride")
+    assert windowed.num_windows == 1
+    assert int(np.asarray(windowed.batch.valid).sum()) == 16
+
+
+def test_pad_windows_empty_stream():
+    z = np.zeros(0, np.int32)
+    windowed = pad_windows(z, z, np.zeros(0, np.int64), z, BatcherConfig())
+    assert windowed.num_windows == 0
+    assert windowed.batch.x.shape == (0, BatcherConfig().capacity)
+
+
+def test_pad_windows_rejects_unknown_policy():
+    z = np.zeros(1, np.int32)
+    with pytest.raises(ValueError):
+        pad_windows(z, z, np.zeros(1, np.int64), z, policy="nope")
+
+
+# ---------------------------------------------------------------------------
+# scan vs loop equivalence
+# ---------------------------------------------------------------------------
+
+def _assert_scan_equals_loop(rec, config):
+    loop = run_recording(rec, config, with_tracking=True)
+    scan = run_recording_scan(rec, config, with_tracking=True)
+    assert scan.num_windows == len(loop)
+    for a, b in zip(loop, scan.window_results()):
+        assert a.t_start_us == b.t_start_us
+        for field in a.clusters._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.clusters, field)),
+                np.asarray(getattr(b.clusters, field)),
+                err_msg=f"clusters.{field}",
+            )
+        for key in a.metrics:
+            np.testing.assert_array_equal(
+                a.metrics[key], b.metrics[key], err_msg=f"metrics[{key}]"
+            )
+        for field in a.tracks._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.tracks, field)),
+                np.asarray(getattr(b.tracks, field)),
+                err_msg=f"tracks.{field}",
+            )
+    for field in scan.final_tracks._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loop[-1].tracks, field)),
+            np.asarray(getattr(scan.final_tracks, field)),
+            err_msg=f"final_tracks.{field}",
+        )
+
+
+def test_scan_equals_loop_jnp_path(suite):
+    for rec in suite:
+        _assert_scan_equals_loop(rec, PipelineConfig(use_kernels=False))
+
+
+def test_scan_equals_loop_kernel_path(suite):
+    # Pallas path; interpret=True is selected automatically off-TPU.
+    _assert_scan_equals_loop(suite[0], PipelineConfig(use_kernels=True))
+
+
+def test_scan_without_tracking(recording):
+    scan = run_recording_scan(recording, PipelineConfig(), with_tracking=False)
+    assert scan.tracks is None and scan.final_tracks is None
+    loop = run_recording(recording, PipelineConfig(), with_tracking=False)
+    for a, b in zip(loop, scan.window_results()):
+        np.testing.assert_array_equal(
+            np.asarray(a.clusters.count), np.asarray(b.clusters.count)
+        )
+
+
+def test_scan_empty_recording():
+    scan = run_recording_scan(_empty_recording(), PipelineConfig())
+    assert scan.num_windows == 0
+    assert scan.clusters.count.shape[0] == 0
+    assert scan.window_results() == []
+
+
+def test_run_many_scan_matches_per_recording():
+    # Different durations -> different window counts, so the pad-to-W_max
+    # path and the padded-tail tracker semantics are exercised.
+    recs = [
+        make_recording(seed=1, duration_s=0.6, n_rsos=2),
+        make_recording(seed=2, duration_s=0.3, n_rsos=1),
+    ]
+    config = PipelineConfig()
+    assert (
+        run_recording_scan(recs[0], config).num_windows
+        != run_recording_scan(recs[1], config).num_windows
+    )
+    many = run_many_scan(recs, config)
+    assert len(many) == len(recs)
+    for res, rec in zip(many, recs):
+        single = run_recording_scan(rec, config)
+        assert res.num_windows == single.num_windows
+        for field in res.clusters._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res.clusters, field)),
+                np.asarray(getattr(single.clusters, field)),
+                err_msg=f"clusters.{field}",
+            )
+        for field in res.final_tracks._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res.final_tracks, field)),
+                np.asarray(getattr(single.final_tracks, field)),
+                err_msg=f"final_tracks.{field}",
+            )
+
+
+def test_run_many_scan_empty_list():
+    assert run_many_scan([], PipelineConfig()) == []
+
+
+def test_scan_reuses_precomputed_windows(recording):
+    config = PipelineConfig()
+    windowed = pad_windows(
+        recording.x, recording.y, recording.t, recording.p, config.batcher
+    )
+    a = run_recording_scan(recording, config, windows=windowed)
+    b = run_recording_scan(recording, config)
+    np.testing.assert_array_equal(
+        np.asarray(a.clusters.count), np.asarray(b.clusters.count)
+    )
