@@ -9,6 +9,8 @@ from repro.core.events import (  # noqa: F401
     unpack_words,
     roi_filter,
     persistent_event_filter,
+    persistent_event_filter_hist,
+    coincidence_counts,
 )
 from repro.core.grid_clustering import (  # noqa: F401
     Clusters,

@@ -90,16 +90,29 @@ def quantize_packed(words: jax.Array, cell_size: int = DEFAULT_CELL_SIZE) -> jax
 def cell_histogram(
     batch: EventBatch, config: GridConfig
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Scatter-accumulate per-cell statistics: count, sum_x, sum_y, sum_t."""
+    """Scatter-accumulate per-cell statistics: count, sum_x, sum_y, sum_t.
+
+    Events outside the sensor are masked out of the weights rather than
+    clipped into a neighbouring cell (a clipped flat index would silently
+    wrap ``x >= width`` onto the next row). The four statistics ride one
+    scatter of (E, 4) rows instead of four separate scatters — XLA's CPU
+    scatter loop is per-update, so packing cuts its iteration count 4x.
+    """
     cx, cy = quantize(batch.x, batch.y, config.cell_size)
+    inb = (
+        (batch.x >= 0)
+        & (batch.x < config.width)
+        & (batch.y >= 0)
+        & (batch.y < config.height)
+    )
+    w = (batch.valid & inb).astype(jnp.float32)
     flat = jnp.clip(cy * config.grid_w + cx, 0, config.n_cells - 1)
-    w = batch.valid.astype(jnp.float32)
-    wi = batch.valid.astype(jnp.int32)
-    count = jnp.zeros((config.n_cells,), jnp.int32).at[flat].add(wi)
-    sum_x = jnp.zeros((config.n_cells,), jnp.float32).at[flat].add(w * batch.x)
-    sum_y = jnp.zeros((config.n_cells,), jnp.float32).at[flat].add(w * batch.y)
-    sum_t = jnp.zeros((config.n_cells,), jnp.float32).at[flat].add(w * batch.t)
-    return count, sum_x, sum_y, sum_t
+    stats = jnp.stack(
+        [w, w * batch.x, w * batch.y, w * batch.t], axis=-1
+    )  # (E, 4)
+    acc = jnp.zeros((config.n_cells, 4), jnp.float32).at[flat].add(stats)
+    count = acc[:, 0].astype(jnp.int32)
+    return count, acc[:, 1], acc[:, 2], acc[:, 3]
 
 
 def clusters_from_histogram(

@@ -69,6 +69,13 @@ class PipelineConfig:
     hot_pixel_max: int = 12
     merge_neighbors: bool = False
     use_kernels: bool = False  # route quantize+accumulate through Pallas
+    # Metrics implementation: "event" (frame-free, O(E + K*patch^2) per
+    # window — the default), "frame" (sensor-sized accumulation image,
+    # the bit-exactness oracle), or "kernel" (fused Pallas patch_metrics).
+    metrics_impl: str = "event"
+    # Window-block size for the event-space scan driver's batched phases
+    # (cache-locality knob; results are invariant to it).
+    scan_chunk: int = 8
 
 
 def _histogram_fn(config: PipelineConfig) -> Callable[[EventBatch], tuple]:
@@ -84,24 +91,57 @@ def _histogram_fn(config: PipelineConfig) -> Callable[[EventBatch], tuple]:
                 cell_size=config.grid.cell_size,
                 grid_w=config.grid.grid_w,
                 grid_h=config.grid.grid_h,
+                width=config.grid.width,
+                height=config.grid.height,
             )
 
         return fn
     return lambda batch: cell_histogram(batch, config.grid)
 
 
-def _window_core(
-    config: PipelineConfig, hist_fn: Callable[[EventBatch], tuple], batch: EventBatch
-) -> tuple[Clusters, dict[str, jax.Array]]:
-    """The per-window computation shared by the loop and scan drivers."""
+def _metrics_fn(
+    config: PipelineConfig,
+) -> Callable[[EventBatch, Clusters], dict[str, jax.Array]]:
+    """Per-window metrics stage for the configured implementation."""
+    impl = config.metrics_impl
+    w, h = config.grid.width, config.grid.height
+    if impl == "frame":
+        return lambda batch, clusters: M.cluster_metrics_frame(batch, clusters, w, h)
+    if impl == "event":
+        return lambda batch, clusters: M.cluster_metrics_events(batch, clusters, w, h)
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        return lambda batch, clusters: kops.patch_metrics_call(
+            batch, clusters, width=w, height=h
+        )
+    raise ValueError(f"unknown metrics_impl: {impl!r}")
+
+
+def _condition(config: PipelineConfig, batch: EventBatch) -> EventBatch:
     batch = roi_filter(batch, config.roi)
-    batch = persistent_event_filter(batch, config.hot_pixel_max)
-    count, sx, sy, st = hist_fn(batch)
-    clusters = clusters_from_histogram(count, sx, sy, st, config.grid)
+    return persistent_event_filter(batch, config.hot_pixel_max)
+
+
+def _cluster(
+    config: PipelineConfig, hist_fn: Callable[[EventBatch], tuple], batch: EventBatch
+) -> Clusters:
+    clusters = clusters_from_histogram(*hist_fn(batch), config.grid)
     if config.merge_neighbors:
         clusters = merge_adjacent(clusters, config.grid)
-    frame = M.reconstruct_frame(batch, config.grid.width, config.grid.height)
-    mets = M.cluster_metrics(frame, clusters)
+    return clusters
+
+
+def _window_core(
+    config: PipelineConfig,
+    hist_fn: Callable[[EventBatch], tuple],
+    metrics_fn: Callable[[EventBatch, Clusters], dict[str, jax.Array]],
+    batch: EventBatch,
+) -> tuple[Clusters, dict[str, jax.Array]]:
+    """The per-window computation shared by the loop and scan drivers."""
+    batch = _condition(config, batch)
+    clusters = _cluster(config, hist_fn, batch)
+    mets = metrics_fn(batch, clusters)
     return clusters, mets
 
 
@@ -114,10 +154,11 @@ def make_process_window(config: PipelineConfig = PipelineConfig()):
     (:func:`make_scan_fn`) is memoized per config instead.
     """
     hist_fn = _histogram_fn(config)
+    metrics_fn = _metrics_fn(config)
 
     @jax.jit
     def process_window(batch: EventBatch) -> tuple[Clusters, dict[str, jax.Array]]:
-        return _window_core(config, hist_fn, batch)
+        return _window_core(config, hist_fn, metrics_fn, batch)
 
     return process_window
 
@@ -207,12 +248,20 @@ class ScanResult:
 
 
 def _make_scan_core(config: PipelineConfig, with_tracking: bool):
-    """Plain (un-jitted) scan function; jit/vmap wrappers are layered on top."""
+    """Plain (un-jitted) scan function; jit/vmap wrappers are layered on top.
+
+    ``metrics_impl="event"`` routes to the phased event-space driver
+    (:func:`_make_event_scan_core`); "frame" and "kernel" keep the
+    straight per-window scan.
+    """
+    if config.metrics_impl == "event":
+        return _make_event_scan_core(config, with_tracking)
     hist_fn = _histogram_fn(config)
+    metrics_fn = _metrics_fn(config)
 
     def scan_core(stacked: EventBatch, state: TrackState):
         def step(carry, batch):
-            clusters, mets = _window_core(config, hist_fn, batch)
+            clusters, mets = _window_core(config, hist_fn, metrics_fn, batch)
             if with_tracking:
                 carry, _ = tracker_step(
                     carry, clusters, mets["shannon_entropy"], config.tracker
@@ -220,6 +269,149 @@ def _make_scan_core(config: PipelineConfig, with_tracking: bool):
             return carry, (clusters, mets, carry)
 
         final, (clusters, mets, states) = jax.lax.scan(step, state, stacked)
+        return final, clusters, mets, states
+
+    return scan_core
+
+
+def _make_event_scan_core(config: PipelineConfig, with_tracking: bool):
+    """Event-space scan driver: O(events + K * patch^2) per window.
+
+    Three phases, all inside one jit (DESIGN.md Sec. 5):
+
+    1. **Batched conditioning + clustering + event stats** — windows are
+       processed in ``scan_chunk`` blocks under ``lax.map`` so the
+       pairwise hot-pixel filter, cell histogram, coincidence sort, and
+       histogram matmul vectorize across windows while staying
+       cache-resident.
+    2. **Event-surface scan** — a persistent sensor-sized int32 surface
+       rides the scan carry; each window writes its <= E leader pixels
+       tagged with the window index (O(E), no per-window clear — stale
+       pixels fail the tag check) and slices K count patches back out.
+       This is the BRAM-resident accumulator a fabric implementation
+       would use: memory is O(sensor), but per-window work is
+       O(E + K * patch^2). The shared exact metric core and the tracker
+       run in the same scan step.
+    3. Outputs are truncated back to the true window count.
+
+    Results are bit-identical to the frame-based scan driver.
+    """
+    hist_fn = _histogram_fn(config)
+    grid = config.grid
+    width, height = grid.width, grid.height
+    window = M.WINDOW
+
+    def scan_core(stacked: EventBatch, state: TrackState):
+        w_total, cap = stacked.x.shape
+        chunk = max(1, min(config.scan_chunk, max(w_total, 1)))
+        pad = (-w_total) % chunk
+        if pad:
+            padded = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
+                ),
+                stacked,
+            )
+        else:
+            padded = stacked
+        w_pad = w_total + pad
+        n_chunks = w_pad // chunk
+        chunked = jax.tree.map(
+            lambda a: a.reshape(n_chunks, chunk, *a.shape[1:]), padded
+        )
+
+        def phase_window(batch: EventBatch):
+            batch = _condition(config, batch)
+            clusters = _cluster(config, hist_fn, batch)
+            c, leader, wmask, norm = M.event_normalizer(batch, width, height)
+            x0, y0 = M.window_origin(
+                clusters.centroid_x, clusters.centroid_y, width, height
+            )
+            hist, moments = M.event_histogram_counts(
+                batch, c, leader, wmask, norm, x0, y0
+            )
+            return (batch.x, batch.y, c, leader, norm, x0, y0, hist, moments, clusters)
+
+        outs = jax.lax.map(lambda cb: jax.vmap(phase_window)(cb), chunked)
+        outs = jax.tree.map(lambda a: a.reshape(w_pad, *a.shape[2:]), outs)
+        ex, ey, c, leader, norm, x0, y0, hist, moments, clusters = outs
+
+        # Phase 2: persistent tagged event surface + metrics + tracker.
+        cols = max(width, cap)
+        shift = max(cap.bit_length(), 1)  # pixel counts fit in `shift` bits
+        mask = (1 << shift) - 1
+        dump_x = jnp.arange(cap, dtype=jnp.int32)
+
+        kmax = grid.max_clusters
+
+        def window_patches(atlas, inp):
+            """One window: tag-write leader pixels, slice K count patches."""
+            tag, bx, by, lead, c_w, x0w, y0w = inp
+            enc = jnp.where(lead, ((tag + 1) << shift) | (c_w & mask), 0)
+            ix = jnp.where(lead, bx, dump_x)
+            iy = jnp.where(lead, by, height)
+            atlas = atlas.at[iy, ix].set(
+                enc, unique_indices=True, mode="promise_in_bounds"
+            )
+
+            def one_patch(x0k, y0k):
+                tile = jax.lax.dynamic_slice(atlas, (y0k, x0k), (window, window))
+                return jnp.where(
+                    (tile >> shift) == tag + 1, tile & mask, 0
+                ).astype(jnp.float32)
+
+            return atlas, jax.vmap(one_patch)(x0w, y0w)
+
+        def chunk_step(atlas, inp):
+            """One chunk: per-window patch extraction (sequential, shares
+            the surface), then the dense metric core batched over the
+            whole (chunk * K) patch block for vector width."""
+            tag, bx, by, lead, c_w, norm_w, x0w, y0w, hist_w, mom_w, cl = inp
+            atlas, patches = jax.lax.scan(
+                window_patches, atlas, (tag, bx, by, lead, c_w, x0w, y0w)
+            )
+            mets = jax.vmap(M._exact_cluster_metrics)(
+                patches.reshape(chunk * kmax, window, window),
+                hist_w.reshape(chunk * kmax, -1),
+                jnp.repeat(norm_w, kmax),
+                cl.count.reshape(chunk * kmax),
+                cl.valid.reshape(chunk * kmax),
+                jax.tree.map(lambda a: a.reshape(chunk * kmax), mom_w),
+            )
+            return atlas, {k: v.reshape(chunk, kmax) for k, v in mets.items()}
+
+        atlas0 = jnp.zeros((height + 1, cols), jnp.int32)
+        tags = jnp.arange(w_pad, dtype=jnp.int32)
+        rechunk = lambda a: a.reshape(n_chunks, chunk, *a.shape[1:])
+        _, mets = jax.lax.scan(
+            chunk_step,
+            atlas0,
+            jax.tree.map(
+                rechunk,
+                (tags, ex, ey, leader, c, norm, x0, y0, hist, moments, clusters),
+            ),
+        )
+        mets = {k: v.reshape(w_pad, kmax) for k, v in mets.items()}
+
+        # Truncate the chunk padding, then track over the true windows only.
+        trim = lambda a: a[:w_total]
+        clusters = jax.tree.map(trim, clusters)
+        mets = {k: trim(v) for k, v in mets.items()}
+
+        if with_tracking:
+            def track_step(carry, inp):
+                cl, shannon = inp
+                carry, _ = tracker_step(carry, cl, shannon, config.tracker)
+                return carry, carry
+
+            final, states = jax.lax.scan(
+                track_step, state, (clusters, mets["shannon_entropy"])
+            )
+        else:
+            final = state
+            states = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (w_total,) + a.shape), state
+            )
         return final, clusters, mets, states
 
     return scan_core

@@ -25,7 +25,7 @@ EVENT_TILE = 256  # events per grid step
 LANE = 128
 
 
-def _kernel(x_ref, y_ref, t_ref, valid_ref, out_ref, *, cell_size: int, grid_w: int, n_cells_padded: int):
+def _kernel(x_ref, y_ref, t_ref, valid_ref, out_ref, *, cell_size: int, grid_w: int, n_cells_padded: int, width: int, height: int):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -36,6 +36,10 @@ def _kernel(x_ref, y_ref, t_ref, valid_ref, out_ref, *, cell_size: int, grid_w: 
     y = y_ref[...].astype(jnp.int32)
     t = t_ref[...].astype(jnp.float32)
     v = valid_ref[...].astype(jnp.float32)
+    # Sensor-bounds mask mirrors core.grid_clustering.cell_histogram:
+    # out-of-range events are dropped, never wrapped into another cell.
+    inb = (x >= 0) & (x < width) & (y >= 0) & (y < height)
+    v = v * inb.astype(jnp.float32)
 
     if cell_size & (cell_size - 1) == 0:
         shift = cell_size.bit_length() - 1
@@ -71,16 +75,22 @@ def cluster_accum(
     cell_size: int,
     grid_w: int,
     grid_h: int,
+    width: int | None = None,
+    height: int | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused histogram/centroid accumulation over an event batch.
 
     Inputs are (N,) arrays with N a multiple of EVENT_TILE (ops.py pads).
     Returns (count int32, sum_x, sum_y, sum_t float32), each (grid_w*grid_h,).
+    ``width``/``height`` bound the valid sensor area (default: the full
+    grid extent), matching the core path's out-of-range masking.
     """
     n = x.shape[0]
     if n % EVENT_TILE:
         raise ValueError(f"N ({n}) must be a multiple of {EVENT_TILE}")
+    width = grid_w * cell_size if width is None else width
+    height = grid_h * cell_size if height is None else height
     n_cells = grid_w * grid_h
     n_cells_padded = -(-n_cells // LANE) * LANE
     grid = (n // EVENT_TILE,)
@@ -92,6 +102,7 @@ def cluster_accum(
         lambda xr, yr, tr, vr, o: _kernel(
             xr, yr, tr, vr, o,
             cell_size=cell_size, grid_w=grid_w, n_cells_padded=n_cells_padded,
+            width=width, height=height,
         ),
         grid=grid,
         in_specs=[

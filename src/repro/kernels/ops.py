@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import cluster_accum as _ca
 from repro.kernels import grid_quantize as _gq
+from repro.kernels import patch_metrics as _pm
 from repro.kernels import window_entropy as _we
 
 
@@ -57,6 +58,8 @@ def cluster_accum_call(
     cell_size: int,
     grid_w: int,
     grid_h: int,
+    width: int | None = None,
+    height: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Trace-time fused quantize + per-cell count/centroid accumulation.
@@ -77,17 +80,67 @@ def cluster_accum_call(
         cell_size=cell_size,
         grid_w=grid_w,
         grid_h=grid_h,
+        width=width,
+        height=height,
         interpret=interpret,
     )
 
 
 cluster_accum = jax.jit(
     cluster_accum_call,
-    static_argnames=("cell_size", "grid_w", "grid_h", "interpret"),
+    static_argnames=("cell_size", "grid_w", "grid_h", "width", "height", "interpret"),
 )
 cluster_accum.__doc__ = (
     "Jit'd entry point for host callers; see :func:`cluster_accum_call`."
 )
+
+
+def patch_metrics_call(
+    batch,
+    clusters,
+    *,
+    width: int = 640,
+    height: int = 480,
+    window: int | None = None,
+    bins: int | None = None,
+    interpret: bool | None = None,
+) -> dict:
+    """Trace-time fused event->patch scatter + six cluster metrics.
+
+    Event-space preprocessing (coincidence counts, leaders, the frame
+    normalizer, patch origins) runs as jnp ops that fuse into the caller's
+    jit; the per-cluster patch accumulation, histogram, Sobel, and metric
+    math run in the Pallas kernel. Like :func:`cluster_accum_call` this is
+    safe inside an enclosing jit or scan body. Returns the metric dict
+    keyed by ``repro.core.metrics.METRIC_NAMES``.
+    """
+    from repro.core import metrics as M
+
+    interpret = _default_interpret() if interpret is None else interpret
+    window = M.WINDOW if window is None else window
+    bins = M.HIST_BINS if bins is None else bins
+    c, leader, w, norm = M.event_normalizer(batch, width, height)
+    x0, y0 = M.window_origin(
+        clusters.centroid_x, clusters.centroid_y, width, height, window
+    )
+    e = batch.x.shape[0]
+    n_pad = -(-e // _pm.LANE) * _pm.LANE
+    out = _pm.patch_metrics(
+        _pad_to(batch.x.astype(jnp.int32), n_pad),
+        _pad_to(batch.y.astype(jnp.int32), n_pad),
+        _pad_to(w.astype(jnp.float32), n_pad),
+        _pad_to(c.astype(jnp.float32), n_pad),
+        _pad_to(leader.astype(jnp.float32), n_pad),
+        x0,
+        y0,
+        clusters.count,
+        clusters.valid,
+        norm,
+        window=window,
+        bins=bins,
+        interpret=interpret,
+    )
+    return {name: out[:, i] for i, name in enumerate(M.METRIC_NAMES)}
 
 
 @partial(jax.jit, static_argnames=("window", "bins", "interpret"))

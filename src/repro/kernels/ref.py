@@ -29,12 +29,20 @@ def cluster_accum_ref(
     cell_size: int,
     grid_w: int,
     grid_h: int,
+    width: int | None = None,
+    height: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Oracle for kernels.cluster_accum.cluster_accum."""
+    width = grid_w * cell_size if width is None else width
+    height = grid_h * cell_size if height is None else height
     n_cells = grid_w * grid_h
-    cx = x.astype(jnp.int32) // cell_size
-    cy = y.astype(jnp.int32) // cell_size
+    xi = x.astype(jnp.int32)
+    yi = y.astype(jnp.int32)
+    cx = xi // cell_size
+    cy = yi // cell_size
     flat = jnp.clip(cy * grid_w + cx, 0, n_cells - 1)
+    inb = (xi >= 0) & (xi < width) & (yi >= 0) & (yi < height)
+    valid = valid & inb
     v = valid.astype(jnp.float32)
     vi = valid.astype(jnp.int32)
     count = jnp.zeros((n_cells,), jnp.int32).at[flat].add(vi)

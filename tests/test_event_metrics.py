@@ -1,0 +1,275 @@
+"""Frame-free event-space core: equivalence surfaces (ISSUE 2).
+
+* pairwise ``persistent_event_filter`` == sensor-histogram oracle,
+* sort-based ``coincidence_counts`` == naive pairwise reference,
+* out-of-bounds coordinates are masked, never wrapped onto another row,
+* ``cluster_metrics_events`` (frame-free) bit-identical to the
+  frame-based ``cluster_metrics_frame`` oracle, including edge-clamped
+  centroids and zero-valid windows,
+* the event-space scan driver bit-identical to the frame scan driver.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core import metrics as M
+from repro.core.events import (
+    EventBatch,
+    batch_from_arrays,
+    coincidence_counts,
+    persistent_event_filter,
+    persistent_event_filter_hist,
+)
+from repro.core.grid_clustering import GridConfig, cell_histogram, grid_cluster
+from repro.core.pipeline import PipelineConfig, run_recording_scan
+from repro.data.synthetic import make_recording
+
+RNG = np.random.default_rng(7)
+
+
+def _random_batch(seed, n=200, capacity=256, spread=640):
+    rng = np.random.default_rng(seed)
+    # Cluster events around a few hot spots so patches overlap and some
+    # pixels repeat (coincidence counts > 1).
+    centers = rng.integers(30, 600, (4, 2))
+    pick = rng.integers(0, 4, n)
+    x = np.clip(centers[pick, 0] + rng.integers(-20, 21, n), 0, spread - 1)
+    y = np.clip(centers[pick, 1] + rng.integers(-20, 21, n), 0, 479)
+    batch = batch_from_arrays(x, y, np.arange(n), rng.integers(0, 2, n), capacity)
+    # Random validity holes exercise masked events.
+    valid = np.asarray(batch.valid) & (rng.random(capacity) > 0.1)
+    return batch._replace(valid=jnp.asarray(valid))
+
+
+# ---------------------------------------------------------------------------
+# persistent_event_filter: pairwise vs histogram oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.integers(1, 250),
+    st.sampled_from([1, 2, 8, 12]),
+)
+def test_persistent_filter_pairwise_matches_hist(seed, n, max_repeats):
+    rng = np.random.default_rng(seed)
+    # Narrow coordinate range to force hot pixels.
+    x = rng.integers(0, 30, n)
+    y = rng.integers(0, 30, n)
+    batch = batch_from_arrays(x, y, np.arange(n), np.zeros(n))
+    valid = np.asarray(batch.valid) & (rng.random(batch.capacity) > 0.2)
+    batch = batch._replace(valid=jnp.asarray(valid))
+    a = persistent_event_filter(batch, max_repeats)
+    b = persistent_event_filter_hist(batch, max_repeats)
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+
+
+def test_persistent_filter_large_capacity_sort_path():
+    # Capacities past the pairwise cutoff route through the sort-based
+    # coincidence count; the keep mask must still match the oracle.
+    n, cap = 1500, 2048
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 40, n)
+    y = rng.integers(0, 40, n)
+    batch = batch_from_arrays(x, y, np.arange(n), np.zeros(n), capacity=cap)
+    valid = np.asarray(batch.valid) & (rng.random(cap) > 0.2)
+    batch = batch._replace(valid=jnp.asarray(valid))
+    a = persistent_event_filter(batch, max_repeats=4)
+    b = persistent_event_filter_hist(batch, max_repeats=4)
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+
+
+def test_persistent_filter_removes_hot_pixel():
+    x = np.array([5] * 10 + [100, 101, 102])
+    y = np.array([5] * 10 + [100, 100, 100])
+    batch = batch_from_arrays(x, y, np.arange(13), np.zeros(13), capacity=16)
+    out = persistent_event_filter(batch, max_repeats=8)
+    v = np.asarray(out.valid)
+    assert not v[:10].any()  # hot pixel gone
+    assert v[10:13].all()  # isolated events kept
+
+
+# ---------------------------------------------------------------------------
+# coincidence_counts
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 256))
+def test_coincidence_counts_match_pairwise(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 25, n), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 25, n), jnp.int32)
+    w = jnp.asarray(rng.random(n) > 0.3)
+    c, leader = coincidence_counts(x, y, w)
+    same = (x[:, None] == x[None, :]) & (y[:, None] == y[None, :])
+    c_ref = np.asarray(jnp.sum(same & w[None, :], axis=-1))
+    cn, ln, wn = np.asarray(c), np.asarray(leader), np.asarray(w)
+    np.testing.assert_array_equal(cn[wn], c_ref[wn])
+    # Exactly one leader per occupied pixel, and leaders are weighted.
+    assert not ln[~wn].any()
+    keys = np.asarray(y) * 640 + np.asarray(x)
+    assert ln.sum() == len(np.unique(keys[wn]))
+    for k in np.unique(keys[wn]):
+        assert ln[wn & (keys == k)].sum() == 1
+
+
+def test_coincidence_counts_all_invalid():
+    x = jnp.zeros(8, jnp.int32)
+    c, leader = coincidence_counts(x, x, jnp.zeros(8, bool))
+    assert not np.asarray(leader).any()
+
+
+# ---------------------------------------------------------------------------
+# Out-of-bounds coordinates are masked, not wrapped
+# ---------------------------------------------------------------------------
+
+def test_reconstruct_frame_masks_out_of_bounds():
+    # x = width would previously clip the flat index onto the next row.
+    batch = batch_from_arrays(
+        np.array([640, 10, -1]), np.array([10, 470, 5]),
+        np.arange(3), np.zeros(3), capacity=4,
+    )
+    img = M.accumulate_image(batch)
+    assert float(img.sum()) == 1.0  # only the in-bounds event lands
+    assert float(img[470, 10]) == 1.0
+    assert float(img[11, 0]) == 0.0  # no wraparound onto row 11
+
+
+def test_cell_histogram_masks_out_of_bounds():
+    cfg = GridConfig()
+    batch = batch_from_arrays(
+        np.array([640, 655, 100]), np.array([0, 479, 100]),
+        np.arange(3), np.zeros(3), capacity=4,
+    )
+    count, sx, sy, st_ = cell_histogram(batch, cfg)
+    assert int(np.asarray(count).sum()) == 1
+    # The in-bounds event is in cell (6, 6).
+    assert int(np.asarray(count)[6 * cfg.grid_w + 6]) == 1
+
+
+def test_cluster_accum_kernel_masks_out_of_bounds():
+    from repro.kernels import ops as kops
+
+    cfg = GridConfig()
+    x = jnp.asarray([640, 100], jnp.int32)
+    y = jnp.asarray([0, 100], jnp.int32)
+    count, *_ = kops.cluster_accum(
+        x, y, jnp.zeros(2), jnp.ones(2, bool),
+        cell_size=cfg.cell_size, grid_w=cfg.grid_w, grid_h=cfg.grid_h,
+        width=cfg.width, height=cfg.height,
+    )
+    assert int(np.asarray(count).sum()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Frame-free metrics == frame-based oracle, bit for bit
+# ---------------------------------------------------------------------------
+
+def _assert_metrics_identical(batch, clusters):
+    a = M.cluster_metrics_frame(batch, clusters)
+    b = M.cluster_metrics_events(batch, clusters)
+    assert set(a) == set(M.METRIC_NAMES)
+    for k in a:
+        np.testing.assert_array_equal(
+            np.asarray(a[k]), np.asarray(b[k]), err_msg=k
+        )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_event_metrics_bit_identical_random(seed):
+    batch = _random_batch(seed)
+    clusters = grid_cluster(batch, GridConfig(min_events=2))
+    _assert_metrics_identical(batch, clusters)
+
+
+def test_event_metrics_bit_identical_edge_clamped():
+    # Events hugging every sensor corner -> centroids clamp to the border.
+    pts = []
+    for cx, cy in [(1, 1), (638, 1), (1, 478), (638, 477)]:
+        pts += [(cx + dx, cy) for dx in (-1, 0, 1)] * 2
+    pts = np.array(pts)
+    batch = batch_from_arrays(
+        pts[:, 0], pts[:, 1], np.arange(len(pts)), np.zeros(len(pts))
+    )
+    clusters = grid_cluster(batch, GridConfig(min_events=2))
+    assert int(clusters.num_valid()) >= 4
+    _assert_metrics_identical(batch, clusters)
+
+
+def test_event_metrics_bit_identical_zero_valid():
+    batch = _random_batch(5)
+    batch = batch._replace(valid=jnp.zeros_like(batch.valid))
+    clusters = grid_cluster(batch, GridConfig())
+    assert int(clusters.num_valid()) == 0
+    _assert_metrics_identical(batch, clusters)
+    mets = M.cluster_metrics_events(batch, clusters)
+    assert all(float(np.abs(np.asarray(v)).max()) == 0.0 for v in mets.values())
+
+
+def test_event_metrics_bit_identical_after_hot_filter():
+    batch = persistent_event_filter(_random_batch(6), max_repeats=2)
+    clusters = grid_cluster(batch, GridConfig(min_events=2))
+    _assert_metrics_identical(batch, clusters)
+
+
+def test_count_patches_match_frame_slices():
+    batch = _random_batch(8)
+    clusters = grid_cluster(batch, GridConfig(min_events=2))
+    img = M.accumulate_image(batch)
+    patches = M.cluster_count_patches(batch, clusters)
+    for k in range(patches.shape[0]):
+        ref = M.extract_window(
+            img, clusters.centroid_x[k], clusters.centroid_y[k]
+        )
+        np.testing.assert_array_equal(np.asarray(patches[k]), np.asarray(ref))
+
+
+def test_exact_core_close_to_legacy_metrics():
+    """The refactored shared core agrees with the legacy frame metrics to
+    float tolerance (same math, replayable summation forms)."""
+    batch = _random_batch(9)
+    clusters = grid_cluster(batch, GridConfig(min_events=2))
+    legacy = M.cluster_metrics(M.reconstruct_frame(batch), clusters)
+    exact = M.cluster_metrics_frame(batch, clusters)
+    for k in M.METRIC_NAMES:
+        np.testing.assert_allclose(
+            np.asarray(legacy[k]), np.asarray(exact[k]),
+            rtol=1e-4, atol=1e-4, err_msg=k,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-level: scan drivers agree across metrics_impl
+# ---------------------------------------------------------------------------
+
+def test_scan_event_impl_matches_frame_impl():
+    rec = make_recording(seed=11, duration_s=0.4, n_rsos=2)
+    cfg = PipelineConfig()  # metrics_impl="event"
+    a = run_recording_scan(rec, cfg)
+    b = run_recording_scan(rec, dataclasses.replace(cfg, metrics_impl="frame"))
+    for k in a.metrics:
+        np.testing.assert_array_equal(
+            np.asarray(a.metrics[k]), np.asarray(b.metrics[k]), err_msg=k
+        )
+    for f in a.final_tracks._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.final_tracks, f)),
+            np.asarray(getattr(b.final_tracks, f)),
+            err_msg=f,
+        )
+
+
+def test_scan_event_impl_invariant_to_chunk():
+    rec = make_recording(seed=11, duration_s=0.3, n_rsos=1)
+    base = run_recording_scan(rec, PipelineConfig(scan_chunk=16))
+    for chunk in (1, 3, 64):
+        out = run_recording_scan(rec, PipelineConfig(scan_chunk=chunk))
+        for k in base.metrics:
+            np.testing.assert_array_equal(
+                np.asarray(base.metrics[k]), np.asarray(out.metrics[k]),
+                err_msg=f"chunk={chunk} {k}",
+            )

@@ -104,3 +104,51 @@ def test_window_entropy_constant_patch_is_zero():
     out = np.asarray(ops.window_entropy(frame, jnp.asarray([100]), jnp.asarray([100])))
     assert out[0, 0] == pytest.approx(0.0, abs=1e-5)  # shannon
     assert out[2, 0] == pytest.approx(0.0, abs=1e-6)  # contrast
+
+
+# ---------------------------------------------------------------------------
+# patch_metrics (fused event->patch + six cluster metrics)
+# ---------------------------------------------------------------------------
+
+def _metrics_inputs(seed, n=180, capacity=256):
+    from repro.core.events import batch_from_arrays
+    from repro.core.grid_clustering import GridConfig, grid_cluster
+
+    rng = np.random.default_rng(seed)
+    centers = rng.integers(40, 580, (3, 2))
+    pick = rng.integers(0, 3, n)
+    x = np.clip(centers[pick, 0] + rng.integers(-15, 16, n), 0, 639)
+    y = np.clip(centers[pick, 1] + rng.integers(-15, 16, n), 0, 479)
+    batch = batch_from_arrays(x, y, np.arange(n), np.zeros(n), capacity)
+    clusters = grid_cluster(batch, GridConfig(min_events=2))
+    return batch, clusters
+
+
+@pytest.mark.parametrize("seed", [0, 1, 5])
+def test_patch_metrics_matches_event_path(seed):
+    from repro.core import metrics as M
+
+    batch, clusters = _metrics_inputs(seed)
+    out = jax.jit(
+        lambda b, c: ops.patch_metrics_call(b, c, width=640, height=480)
+    )(batch, clusters)
+    ref = M.cluster_metrics_events(batch, clusters)
+    assert set(out) == set(M.METRIC_NAMES)
+    for k in M.METRIC_NAMES:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]),
+            rtol=1e-5, atol=1e-5, err_msg=k,
+        )
+
+
+def test_patch_metrics_zero_valid_window():
+    from repro.core import metrics as M
+
+    batch, clusters = _metrics_inputs(2)
+    batch = batch._replace(valid=jnp.zeros_like(batch.valid))
+    from repro.core.grid_clustering import GridConfig, grid_cluster
+
+    clusters = grid_cluster(batch, GridConfig())
+    out = ops.patch_metrics_call(batch, clusters, width=640, height=480)
+    for k in M.METRIC_NAMES:
+        assert float(np.abs(np.asarray(out[k])).max()) == 0.0, k
