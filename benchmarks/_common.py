@@ -1,10 +1,25 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import subprocess
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def git_commit() -> str:
+    """Short hash of HEAD, or "unknown" outside a usable git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=REPO_ROOT, capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -8,9 +8,10 @@ the detections with their quality metrics.
 Uses the device-resident scan driver (``run_recording_scan``): the whole
 recording is windowed on host once, then conditioning -> clustering ->
 metrics -> tracking run as a single compiled ``lax.scan`` with one
-device dispatch. The legacy per-window loop (``run_recording``) produces
-identical results one window at a time — use it when events arrive as a
-live stream instead of a recorded file.
+device dispatch. When events arrive as a live stream instead of a
+recorded file, feed them incrementally to ``StreamingPipeline`` — see
+``examples/stream_quickstart.py`` — for bit-identical results per
+closed window.
 
   PYTHONPATH=src python examples/quickstart.py
 """

@@ -62,7 +62,15 @@ def batch_from_arrays(
     p: np.ndarray,
     capacity: int = DEFAULT_CAPACITY,
 ) -> EventBatch:
-    """Pad/truncate host arrays into a fixed-capacity EventBatch."""
+    """Pad/truncate host arrays into a fixed-capacity EventBatch.
+
+    Truncation drops the ``len(x) - capacity`` trailing events; the
+    stacked path (:func:`pack_bounds` / :func:`pad_windows`) records that
+    count per window in ``WindowedEvents.overflow`` rather than losing it.
+    Iterator callers can recover it as ``max(0, (sl.stop - sl.start) -
+    capacity)`` from the yielded slice. Dual-threshold windows never
+    truncate while ``size_threshold <= capacity`` (the default).
+    """
     n = min(len(x), capacity)
     pad = capacity - n
 
@@ -218,21 +226,56 @@ def dual_threshold_bounds(
     """Window boundaries (start, stop) under the dual-threshold policy.
 
     Shared by the streaming batcher and :func:`pad_windows` so the host
-    loop and the device-resident scan see identical windows.
+    loop, the device-resident scan, and the streaming engine see
+    identical windows. Derived from
+    :func:`dual_threshold_closed_bounds` — the one implementation of the
+    size/time cuts — plus the end-of-stream rule: the trailing remainder
+    (which by construction neither cut can close, so it is a single
+    window shorter than ``size_threshold``) is force-closed at the last
+    event.
+    """
+    bounds, start = dual_threshold_closed_bounds(t, config)
+    if start < len(t):
+        bounds.append((start, len(t)))
+    return bounds
+
+
+def dual_threshold_closed_bounds(
+    t: np.ndarray, config: BatcherConfig = BatcherConfig()
+) -> tuple[list[tuple[int, int]], int]:
+    """Provably-final window bounds for a stream that may still continue.
+
+    Same semantics as :func:`dual_threshold_bounds`, restricted to windows
+    whose boundaries no future event can change: either an event at or past
+    ``t0 + time_threshold_us`` is already buffered (time cut lands inside
+    the buffer) or ``size_threshold`` events have accumulated (size cut
+    binds regardless of later timestamps). The trailing partial window
+    stays pending. Returns ``(bounds, consumed)`` where ``consumed`` is the
+    prefix length covered by the closed windows; for any split of a
+    recording into chunks, concatenating the closed bounds of successive
+    buffers (plus a final :func:`dual_threshold_bounds` pass over the last
+    remainder) reproduces the whole-recording bounds exactly — the
+    invariant the streaming engine's bit-identity rests on.
     """
     n = len(t)
     bounds: list[tuple[int, int]] = []
     start = 0
     while start < n:
         t0 = t[start]
-        # size cut
-        end_size = min(start + config.size_threshold, n)
-        # time cut: first index with t >= t0 + threshold
+        end_size = start + config.size_threshold
         end_time = int(np.searchsorted(t, t0 + config.time_threshold_us, side="left"))
-        end = max(start + 1, min(end_size, end_time if end_time > start else end_size))
+        if end_time > start:
+            if end_time >= n and end_size > n:
+                break  # neither cut provably lands inside the buffer yet
+            end = min(end_size, end_time)
+        else:  # degenerate time threshold: only the size cut can close
+            if end_size > n:
+                break
+            end = end_size
+        end = max(start + 1, min(end, n))
         bounds.append((start, end))
         start = end
-    return bounds
+    return bounds, start
 
 
 def dual_threshold_batches(
@@ -309,12 +352,21 @@ class WindowedEvents(NamedTuple):
     device dispatch. Host-side bookkeeping (window start times and slice
     boundaries into the original stream) rides along as numpy arrays for
     ground-truth matching.
+
+    ``overflow`` records per-window event loss: windows longer than
+    ``capacity`` are truncated to fit the fixed shape, and the number of
+    dropped events lands here instead of vanishing silently. Under the
+    dual-threshold policy every window closes at ``<= size_threshold``
+    events, so overflow is all-zero whenever ``size_threshold <=
+    capacity``; ``policy="stride"`` windows are unbounded and can
+    genuinely truncate.
     """
 
     batch: EventBatch  # leaves (W, capacity)
     t_start_us: np.ndarray  # (W,) int64 absolute window origin
     starts: np.ndarray  # (W,) int64 slice start into the recording
     stops: np.ndarray  # (W,) int64 slice stop (exclusive)
+    overflow: np.ndarray | None = None  # (W,) int64 events dropped past capacity
 
     @property
     def num_windows(self) -> int:
@@ -323,6 +375,50 @@ class WindowedEvents(NamedTuple):
     @property
     def capacity(self) -> int:
         return self.batch.x.shape[-1]
+
+
+def pack_bounds(
+    x: np.ndarray,
+    y: np.ndarray,
+    t: np.ndarray,
+    p: np.ndarray,
+    bounds: list[tuple[int, int, int]],
+    capacity: int,
+) -> WindowedEvents:
+    """Pack ``(start, stop, t0_us)`` bounds into a stacked WindowedEvents.
+
+    One bulk scatter per field over (window-row, column) index arrays —
+    no per-window Python slice loop — so host packing scales with total
+    events, not windows. Rows longer than ``capacity`` are truncated and
+    the per-window drop count recorded in ``overflow``.
+    """
+    w = len(bounds)
+    cap = capacity
+    bx = np.zeros((w, cap), np.int32)
+    by = np.zeros((w, cap), np.int32)
+    bt = np.zeros((w, cap), np.int32)
+    bp = np.zeros((w, cap), np.int32)
+    bv = np.zeros((w, cap), bool)
+    starts = np.fromiter((b[0] for b in bounds), np.int64, count=w)
+    stops = np.fromiter((b[1] for b in bounds), np.int64, count=w)
+    t_start = np.fromiter((b[2] for b in bounds), np.int64, count=w)
+    n = np.minimum(stops - starts, cap)
+    overflow = stops - starts - n
+    total = int(n.sum())
+    if total:
+        rows = np.repeat(np.arange(w), n)
+        cols = np.arange(total) - np.repeat(np.cumsum(n) - n, n)
+        src = np.repeat(starts, n) + cols
+        bx[rows, cols] = x[src]
+        by[rows, cols] = y[src]
+        bt[rows, cols] = t[src] - np.repeat(t_start, n)
+        bp[rows, cols] = p[src]
+        bv[rows, cols] = True
+    batch = EventBatch(
+        jnp.asarray(bx), jnp.asarray(by), jnp.asarray(bt), jnp.asarray(bp),
+        jnp.asarray(bv),
+    )
+    return WindowedEvents(batch, t_start, starts, stops, overflow)
 
 
 def pad_windows(
@@ -341,7 +437,8 @@ def pad_windows(
     capacity truncation); ``policy="stride"`` reproduces
     :func:`window_batches`. The result feeds ``run_recording_scan``:
     one device transfer in, one compiled scan over the W axis, one
-    transfer out.
+    transfer out. Events dropped by capacity truncation are counted in
+    the result's ``overflow`` field.
     """
     x = np.asarray(x)
     y = np.asarray(y)
@@ -353,28 +450,4 @@ def pad_windows(
         bounds = stride_bounds(t, window_us or config.time_threshold_us)
     else:
         raise ValueError(f"unknown windowing policy: {policy!r}")
-
-    w = len(bounds)
-    cap = config.capacity
-    bx = np.zeros((w, cap), np.int32)
-    by = np.zeros((w, cap), np.int32)
-    bt = np.zeros((w, cap), np.int32)
-    bp = np.zeros((w, cap), np.int32)
-    bv = np.zeros((w, cap), bool)
-    t_start = np.zeros((w,), np.int64)
-    starts = np.zeros((w,), np.int64)
-    stops = np.zeros((w,), np.int64)
-    for i, (s, e, t0) in enumerate(bounds):
-        n = min(e - s, cap)
-        bx[i, :n] = x[s : s + n]
-        by[i, :n] = y[s : s + n]
-        bt[i, :n] = t[s : s + n] - t0
-        bp[i, :n] = p[s : s + n]
-        bv[i, :n] = True
-        t_start[i], starts[i], stops[i] = t0, s, e
-
-    batch = EventBatch(
-        jnp.asarray(bx), jnp.asarray(by), jnp.asarray(bt), jnp.asarray(bp),
-        jnp.asarray(bv),
-    )
-    return WindowedEvents(batch, t_start, starts, stops)
+    return pack_bounds(x, y, t, p, bounds, config.capacity)

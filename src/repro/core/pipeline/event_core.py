@@ -1,0 +1,160 @@
+"""The event-space step core: phased, atlas-carrying, O(E + K*48^2)/window.
+
+Split out of ``scan.py`` so the scheduling-heavy phase machinery lives in
+one place; see DESIGN.md Sec. 5 for the design and ``scan.py`` for the
+core's carry contract (state, atlas, tag0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.core.events import EventBatch
+from repro.core.pipeline.config import PipelineConfig, _histogram_fn
+from repro.core.pipeline.window_core import _cluster, _condition
+from repro.core.tracking import TrackState, tracker_step
+
+
+def _make_event_core(config: PipelineConfig, with_tracking: bool):
+    """Event-space step core: O(events + K * patch^2) per window.
+
+    Three phases, all inside one jit (DESIGN.md Sec. 5):
+
+    1. **Batched conditioning + clustering + event stats** — windows are
+       processed in ``scan_chunk`` blocks under ``lax.map`` so the
+       pairwise hot-pixel filter, cell histogram, coincidence sort, and
+       histogram matmul vectorize across windows while staying
+       cache-resident.
+    2. **Event-surface scan** — the persistent sensor-sized int32 atlas
+       (passed in as carry, returned updated); each window writes its
+       <= E leader pixels tagged ``tag0 + w`` (O(E), no per-window clear
+       — stale pixels fail the tag check) and slices K count patches
+       back out. This is the BRAM-resident accumulator a fabric
+       implementation would use: memory is O(sensor), but per-window
+       work is O(E + K * patch^2). The shared exact metric core runs
+       batched per chunk.
+    3. Outputs are truncated back to the true window count; the tracker
+       scans over the true windows only.
+
+    Results are bit-identical to the frame-based core and invariant to
+    how windows are split across core calls (given monotone tags).
+    """
+    hist_fn = _histogram_fn(config)
+    grid = config.grid
+    width, height = grid.width, grid.height
+    window = M.WINDOW
+
+    def core(stacked: EventBatch, state: TrackState, atlas: jax.Array, tag0):
+        w_total, cap = stacked.x.shape
+        assert atlas.shape == (height + 1, max(width, cap)), atlas.shape
+        chunk = max(1, min(config.scan_chunk, max(w_total, 1)))
+        pad = (-w_total) % chunk
+        if pad:
+            padded = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
+                ),
+                stacked,
+            )
+        else:
+            padded = stacked
+        w_pad = w_total + pad
+        n_chunks = w_pad // chunk
+        chunked = jax.tree.map(
+            lambda a: a.reshape(n_chunks, chunk, *a.shape[1:]), padded
+        )
+
+        def phase_window(batch: EventBatch):
+            batch = _condition(config, batch)
+            clusters = _cluster(config, hist_fn, batch)
+            c, leader, wmask, norm = M.event_normalizer(batch, width, height)
+            x0, y0 = M.window_origin(
+                clusters.centroid_x, clusters.centroid_y, width, height
+            )
+            hist, moments = M.event_histogram_counts(
+                batch, c, leader, wmask, norm, x0, y0
+            )
+            return (batch.x, batch.y, c, leader, norm, x0, y0, hist, moments, clusters)
+
+        outs = jax.lax.map(lambda cb: jax.vmap(phase_window)(cb), chunked)
+        outs = jax.tree.map(lambda a: a.reshape(w_pad, *a.shape[2:]), outs)
+        ex, ey, c, leader, norm, x0, y0, hist, moments, clusters = outs
+
+        # Phase 2: persistent tagged event surface + metrics.
+        shift = max(cap.bit_length(), 1)  # pixel counts fit in `shift` bits
+        mask = (1 << shift) - 1
+        dump_x = jnp.arange(cap, dtype=jnp.int32)
+
+        kmax = grid.max_clusters
+
+        def window_patches(surface, inp):
+            """One window: tag-write leader pixels, slice K count patches."""
+            tag, bx, by, lead, c_w, x0w, y0w = inp
+            enc = jnp.where(lead, ((tag + 1) << shift) | (c_w & mask), 0)
+            ix = jnp.where(lead, bx, dump_x)
+            iy = jnp.where(lead, by, height)
+            surface = surface.at[iy, ix].set(
+                enc, unique_indices=True, mode="promise_in_bounds"
+            )
+
+            def one_patch(x0k, y0k):
+                tile = jax.lax.dynamic_slice(surface, (y0k, x0k), (window, window))
+                return jnp.where(
+                    (tile >> shift) == tag + 1, tile & mask, 0
+                ).astype(jnp.float32)
+
+            return surface, jax.vmap(one_patch)(x0w, y0w)
+
+        def chunk_step(surface, inp):
+            """One chunk: per-window patch extraction (sequential, shares
+            the surface), then the dense metric core batched over the
+            whole (chunk * K) patch block for vector width."""
+            tag, bx, by, lead, c_w, norm_w, x0w, y0w, hist_w, mom_w, cl = inp
+            surface, patches = jax.lax.scan(
+                window_patches, surface, (tag, bx, by, lead, c_w, x0w, y0w)
+            )
+            mets = jax.vmap(M._exact_cluster_metrics)(
+                patches.reshape(chunk * kmax, window, window),
+                hist_w.reshape(chunk * kmax, -1),
+                jnp.repeat(norm_w, kmax),
+                cl.count.reshape(chunk * kmax),
+                cl.valid.reshape(chunk * kmax),
+                jax.tree.map(lambda a: a.reshape(chunk * kmax), mom_w),
+            )
+            return surface, {k: v.reshape(chunk, kmax) for k, v in mets.items()}
+
+        tags = jnp.asarray(tag0, jnp.int32) + jnp.arange(w_pad, dtype=jnp.int32)
+        rechunk = lambda a: a.reshape(n_chunks, chunk, *a.shape[1:])
+        atlas, mets = jax.lax.scan(
+            chunk_step,
+            atlas,
+            jax.tree.map(
+                rechunk,
+                (tags, ex, ey, leader, c, norm, x0, y0, hist, moments, clusters),
+            ),
+        )
+        mets = {k: v.reshape(w_pad, kmax) for k, v in mets.items()}
+
+        # Truncate the chunk padding, then track over the true windows only.
+        trim = lambda a: a[:w_total]
+        clusters = jax.tree.map(trim, clusters)
+        mets = {k: trim(v) for k, v in mets.items()}
+
+        if with_tracking:
+            def track_step(carry, inp):
+                cl, shannon = inp
+                carry, _ = tracker_step(carry, cl, shannon, config.tracker)
+                return carry, carry
+
+            final, states = jax.lax.scan(
+                track_step, state, (clusters, mets["shannon_entropy"])
+            )
+        else:
+            final = state
+            states = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (w_total,) + a.shape), state
+            )
+        return final, clusters, mets, states, atlas
+
+    return core

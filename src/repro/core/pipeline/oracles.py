@@ -1,0 +1,150 @@
+"""Host-side oracles for device-resident candidate collection.
+
+:func:`collect_candidates_numpy` is the float64 numpy-vectorized
+matcher; :func:`collect_candidates_loop` is the first-principles
+per-window/per-cluster Python loop. Both are semantically identical to
+``evaluate.collect_candidates`` and exist so the device path stays
+testable against independent implementations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.events import dual_threshold_batches
+from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.evaluate import Candidates, _floor_config, _visible_objects
+from repro.core.pipeline.scan import run_recording_scan
+from repro.core.pipeline.window_core import make_process_window
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid circular import (data.synthetic uses core.events)
+    from repro.data.synthetic import Recording
+
+
+def collect_candidates_numpy(
+    recording: Recording,
+    config: PipelineConfig = PipelineConfig(),
+    candidate_floor: int = 2,
+    max_samples: int | None = None,
+    gate_px: float = 14.0,
+    min_truth_events: int = 3,
+) -> Candidates:
+    """Numpy-vectorized truth matching over the stacked scan outputs.
+
+    The host oracle for :func:`collect_candidates` (float64 matching, same
+    ordering and bookkeeping); itself pinned against
+    :func:`collect_candidates_loop`.
+    """
+    result = run_recording_scan(
+        recording, _floor_config(config, candidate_floor), with_tracking=False
+    )
+    windows = result.windows
+
+    counts = np.asarray(result.clusters.count)  # (W, K)
+    valid = np.asarray(result.clusters.valid)
+    cx = np.asarray(result.clusters.centroid_x, np.float64)
+    cy = np.asarray(result.clusters.centroid_y, np.float64)
+    ct = np.asarray(result.clusters.centroid_t, np.float64)
+    w_count, k = counts.shape if counts.ndim == 2 else (0, 0)
+
+    tracks = np.asarray(recording.rso_tracks, np.float64).reshape(-1, 4)
+    n_rso = tracks.shape[0]
+
+    # Cluster-level: match every (window, slot) centroid against every RSO
+    # trajectory at the cluster's mean event time.
+    t_ev = windows.t_start_us[:, None].astype(np.float64) + ct  # (W, K)
+    ts = t_ev[:, :, None] * 1e-6  # seconds, (W, K, 1)
+    px = tracks[None, None, :, 0] + tracks[None, None, :, 2] * ts  # (W, K, R)
+    py = tracks[None, None, :, 1] + tracks[None, None, :, 3] * ts
+    matched = (
+        np.hypot(px - cx[:, :, None], py - cy[:, :, None]) <= gate_px
+    )  # (W, K, R)
+
+    # Candidate ordering is window-major, slot order — same as the loop.
+    flat_valid = valid.reshape(-1)
+    if max_samples is None:
+        keep_flat = flat_valid
+    else:
+        rank = np.cumsum(flat_valid) - 1
+        keep_flat = flat_valid & (rank < max_samples)
+    keep = keep_flat.reshape(w_count, k)
+    counts_out = counts.reshape(-1)[keep_flat].astype(np.int32)
+    is_rso = matched.any(axis=-1).reshape(-1)[keep_flat]
+
+    visible = _visible_objects(recording, windows, n_rso, min_truth_events)
+    contrib = np.where(
+        matched & keep[:, :, None], counts[:, :, None], 0
+    )  # (W, K, R)
+    best = contrib.max(axis=1) if k else np.zeros((w_count, n_rso), counts.dtype)
+    object_best = best[visible]
+
+    return Candidates(
+        counts_out,
+        np.asarray(is_rso, bool),
+        np.asarray(object_best, np.int32),
+    )
+
+
+def collect_candidates_loop(
+    recording: Recording,
+    config: PipelineConfig = PipelineConfig(),
+    candidate_floor: int = 2,
+    max_samples: int | None = None,
+    gate_px: float = 14.0,
+    min_truth_events: int = 3,
+) -> Candidates:
+    """Legacy per-window/per-cluster Python loop (first-principles oracle).
+
+    Semantically identical to :func:`collect_candidates`; kept so the
+    vectorized paths stay testable against first-principles code.
+    """
+    from repro.data.synthetic import KIND_RSO
+
+    floor_cfg = _floor_config(config, candidate_floor)
+    process_window = make_process_window(floor_cfg)
+    counts_out: list[int] = []
+    truth_out: list[bool] = []
+    object_best: list[int] = []
+    n_rso = np.asarray(recording.rso_tracks).reshape(-1, 4).shape[0]
+
+    for batch, sl in dual_threshold_batches(
+        recording.x, recording.y, recording.t, recording.p, floor_cfg.batcher
+    ):
+        clusters, _ = process_window(batch)
+        counts = np.asarray(clusters.count)
+        valid = np.asarray(clusters.valid)
+        cxs = np.asarray(clusters.centroid_x)
+        cys = np.asarray(clusters.centroid_y)
+        cts = np.asarray(clusters.centroid_t)
+        t0 = float(recording.t[sl.start])
+        # Object-level bookkeeping: best matched count per visible RSO.
+        kinds = recording.kind[sl]
+        objs = recording.obj[sl]
+        best = {}
+        for r in range(n_rso):
+            n_true = int(np.sum((kinds == KIND_RSO) & (objs == r)))
+            if n_true >= min_truth_events:
+                best[r] = 0
+        for k in range(len(counts)):
+            if not valid[k]:
+                continue
+            if max_samples is not None and len(counts_out) >= max_samples:
+                break
+            cx, cy = float(cxs[k]), float(cys[k])
+            t_ev = t0 + float(cts[k])
+            matched = False
+            for r in range(n_rso):
+                px, py = recording.rso_position(r, np.array([t_ev]))
+                if np.hypot(px[0] - cx, py[0] - cy) <= gate_px:
+                    matched = True
+                    if r in best:
+                        best[r] = max(best[r], int(counts[k]))
+            counts_out.append(int(counts[k]))
+            truth_out.append(matched)
+        object_best.extend(best.values())
+    return Candidates(
+        np.asarray(counts_out, np.int32),
+        np.asarray(truth_out, bool),
+        np.asarray(object_best, np.int32),
+    )

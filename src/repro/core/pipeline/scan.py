@@ -1,0 +1,288 @@
+"""Device-resident scanned drivers (one dispatch per recording / batch).
+
+The central object is the **step core** built by :func:`_make_core`:
+
+    core(stacked, state, atlas, tag0) ->
+        (final_state, clusters, mets, states, atlas_out)
+
+It processes a block of pre-windowed events (leaves ``(W, capacity)``)
+through conditioning -> clustering -> metrics -> tracking, threading two
+carries: the tracker state and (for the event-space metrics path) the
+persistent window-tagged event atlas, whose tags start at ``tag0``.
+Everything else is a wrapper:
+
+* ``run_recording_scan`` — one core call over all of a recording's
+  windows with a fresh carry (``tag0 = 0``, zero atlas): the streaming
+  engine's single-feed special case.
+* ``run_many_scan`` — ``vmap`` of the same core over a batch of
+  recordings (multi-sensor throughput).
+* ``StreamingPipeline`` (``stream.py``) — repeated core calls over
+  incrementally closed windows, carrying state/atlas/tag between feeds.
+
+Because window ``w`` only ever reads atlas pixels tagged ``tag0 + w``
+(stale pixels fail the tag check), results are bit-identical no matter
+how the window sequence is split across core calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import EventBatch, WindowedEvents, pad_windows
+from repro.core.grid_clustering import Clusters
+from repro.core.pipeline.config import PipelineConfig, _histogram_fn, _metrics_fn
+from repro.core.pipeline.window_core import WindowResult, _window_core
+from repro.core.tracking import TrackState, init_tracks, tracker_step
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid circular import (data.synthetic uses core.events)
+    from repro.data.synthetic import Recording
+
+
+@dataclasses.dataclass
+class ScanResult:
+    """Stacked outputs of the scanned (or streaming) pipeline.
+
+    ``clusters`` leaves and ``metrics`` values have shape (W, K);
+    ``tracks`` leaves (when tracking is on) have shape (W, T) — the
+    tracker state *after* each window. Everything stays on device until
+    the caller converts it; ``window_results()`` materializes the legacy
+    per-window list for drop-in comparisons.
+    """
+
+    t_start_us: np.ndarray  # (W,) int64
+    clusters: Clusters  # leaves (W, K)
+    metrics: dict[str, jax.Array]  # (W, K)
+    tracks: TrackState | None  # leaves (W, T)
+    final_tracks: TrackState | None
+    windows: WindowedEvents
+
+    @property
+    def num_windows(self) -> int:
+        return int(self.t_start_us.shape[0])
+
+    def window_results(self) -> list[WindowResult]:
+        mets_np = {k: np.asarray(v) for k, v in self.metrics.items()}
+        out: list[WindowResult] = []
+        for w in range(self.num_windows):
+            out.append(
+                WindowResult(
+                    t_start_us=int(self.t_start_us[w]),
+                    clusters=jax.tree.map(lambda a: a[w], self.clusters),
+                    metrics={k: v[w] for k, v in mets_np.items()},
+                    tracks=(
+                        jax.tree.map(lambda a: a[w], self.tracks)
+                        if self.tracks is not None
+                        else None
+                    ),
+                )
+            )
+        return out
+
+
+def atlas_shape(config: PipelineConfig, capacity: int | None = None) -> tuple[int, int]:
+    """Shape of the persistent tagged event surface for this config."""
+    cap = config.batcher.capacity if capacity is None else capacity
+    return (config.grid.height + 1, max(config.grid.width, cap))
+
+
+def make_atlas(config: PipelineConfig, capacity: int | None = None) -> jax.Array:
+    """Fresh (all-stale) tagged event atlas; rides the scan/stream carry."""
+    return jnp.zeros(atlas_shape(config, capacity), jnp.int32)
+
+
+def _make_core(config: PipelineConfig, with_tracking: bool):
+    """Build the (un-jitted) step core; jit/vmap wrappers layer on top.
+
+    ``metrics_impl="event"`` routes to the phased event-space driver
+    (:func:`_make_event_core`); "frame" and "kernel" keep the straight
+    per-window scan (the atlas is threaded through untouched so every
+    impl exposes the same carry signature).
+    """
+    if config.metrics_impl == "event":
+        from repro.core.pipeline.event_core import _make_event_core
+
+        return _make_event_core(config, with_tracking)
+    hist_fn = _histogram_fn(config)
+    metrics_fn = _metrics_fn(config)
+
+    def core(stacked: EventBatch, state: TrackState, atlas: jax.Array, tag0):
+        del tag0  # only the event-space atlas needs window tags
+
+        def step(carry, batch):
+            clusters, mets = _window_core(config, hist_fn, metrics_fn, batch)
+            if with_tracking:
+                carry, _ = tracker_step(
+                    carry, clusters, mets["shannon_entropy"], config.tracker
+                )
+            return carry, (clusters, mets, carry)
+
+        final, (clusters, mets, states) = jax.lax.scan(step, state, stacked)
+        return final, clusters, mets, states, atlas
+
+    return core
+
+
+def _fresh_carry_core(config: PipelineConfig, with_tracking: bool):
+    """Core specialized to a fresh carry (zero atlas, tags from 0)."""
+    core = _make_core(config, with_tracking)
+
+    def scan_core(stacked: EventBatch, state: TrackState):
+        atlas = make_atlas(config, stacked.x.shape[-1])
+        final, clusters, mets, states, _ = core(stacked, state, atlas, 0)
+        return final, clusters, mets, states
+
+    return scan_core
+
+
+@functools.lru_cache(maxsize=None)
+def make_scan_fn(config: PipelineConfig = PipelineConfig(), with_tracking: bool = True):
+    """Jit'd whole-recording scan: (stacked EventBatch, init TrackState) ->
+    (final TrackState, stacked Clusters, stacked metrics, stacked TrackState).
+
+    Compiled once per (config, window count, capacity); cached per config.
+    """
+    return jax.jit(_fresh_carry_core(config, with_tracking))
+
+
+@functools.lru_cache(maxsize=None)
+def make_stream_fn(config: PipelineConfig = PipelineConfig(), with_tracking: bool = True):
+    """Jit'd streaming step with donated carry:
+
+        (stacked, state, atlas, tag0) ->
+            (final_state, clusters, mets, states, atlas_out)
+
+    The atlas is donated — XLA reuses its buffer for the updated carry, so
+    the steady-state feed loop allocates only the per-feed outputs. The
+    tracker state is NOT donated: the previous feed handed it to the
+    caller as ``final_tracks``, and donating it would invalidate that
+    result behind the caller's back (it is (T,)-tiny anyway). Compiled
+    once per (config, windows-per-feed count); cached per config.
+    """
+    return jax.jit(_make_core(config, with_tracking), donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_many_scan_fn(config: PipelineConfig, with_tracking: bool):
+    core = _fresh_carry_core(config, with_tracking)
+    # Map over the recording axis; broadcast the (fresh) tracker state.
+    return jax.jit(jax.vmap(core, in_axes=(0, None)))
+
+
+def run_recording_scan(
+    recording: Recording,
+    config: PipelineConfig = PipelineConfig(),
+    with_tracking: bool = True,
+    windows: WindowedEvents | None = None,
+) -> ScanResult:
+    """Device-resident driver: the whole recording in one core call.
+
+    Windows are identical to ``run_recording``'s dual-threshold batches
+    (same boundaries, same padding), but the per-window stage and the
+    tracker run inside a single compiled scan — one host->device transfer
+    in, one device->host sync out, no per-window dispatch. This is the
+    streaming engine's single-feed special case: one step over all
+    windows with a fresh carry. Pass a precomputed ``windows`` (from
+    :func:`repro.core.events.pad_windows`) to skip the host windowing
+    pass, e.g. when sweeping configs over one recording.
+    """
+    if windows is None:
+        windows = pad_windows(
+            recording.x, recording.y, recording.t, recording.p, config.batcher
+        )
+    scan_fn = make_scan_fn(config, with_tracking)
+    final, clusters, mets, states = scan_fn(windows.batch, init_tracks(config.tracker))
+    return ScanResult(
+        t_start_us=windows.t_start_us,
+        clusters=clusters,
+        metrics=mets,
+        tracks=states if with_tracking else None,
+        final_tracks=final if with_tracking else None,
+        windows=windows,
+    )
+
+
+def _many_scan_raw(
+    recordings: list[Recording],
+    config: PipelineConfig,
+    with_tracking: bool,
+) -> tuple[list[WindowedEvents], tuple]:
+    """Window + stack a batch of recordings and run the vmapped core once.
+
+    Returns the per-recording host windowing plus the *untrimmed* stacked
+    device outputs (leaves (R, W_max, ...)) — the device-resident
+    evaluation path consumes these directly so the whole batch stays at
+    O(1) dispatches.
+    """
+    windowed = [
+        pad_windows(r.x, r.y, r.t, r.p, config.batcher) for r in recordings
+    ]
+    w_max = max(w.num_windows for w in windowed)
+
+    def pad_leaf(a: jax.Array) -> jax.Array:
+        pad = w_max - a.shape[0]
+        if pad == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
+        )
+
+    stacked = EventBatch(
+        *[
+            jnp.stack([pad_leaf(getattr(w.batch, f)) for w in windowed])
+            for f in EventBatch._fields
+        ]
+    )
+    many_fn = _make_many_scan_fn(config, with_tracking)
+    return windowed, many_fn(stacked, init_tracks(config.tracker))
+
+
+def run_many_scan(
+    recordings: list[Recording],
+    config: PipelineConfig = PipelineConfig(),
+    with_tracking: bool = True,
+) -> list[ScanResult]:
+    """Vmapped scan over a batch of recordings (multi-sensor throughput).
+
+    Recordings are windowed on host, right-padded with empty (all-invalid)
+    windows to a common window count, stacked to (R, W, capacity) leaves,
+    and pushed through ``vmap(core)`` in a single dispatch. Results are
+    split back per recording and trimmed to each one's true window count.
+    """
+    if not recordings:
+        return []
+    windowed, (_, clusters, mets, states) = _many_scan_raw(
+        recordings, config, with_tracking
+    )
+    results: list[ScanResult] = []
+    for r, w in enumerate(windowed):
+        n = w.num_windows
+        if not with_tracking:
+            final_r = None
+        elif n == 0:
+            final_r = init_tracks(config.tracker)
+        else:
+            # The scan carry after w_max windows has coasted through this
+            # recording's padded (all-invalid) tail; the true final state
+            # is the per-window state at its last real window.
+            final_r = jax.tree.map(lambda a: a[r, n - 1], states)
+        results.append(
+            ScanResult(
+                t_start_us=w.t_start_us,
+                clusters=jax.tree.map(lambda a: a[r, :n], clusters),
+                metrics={k: v[r, :n] for k, v in mets.items()},
+                tracks=(
+                    jax.tree.map(lambda a: a[r, :n], states)
+                    if with_tracking
+                    else None
+                ),
+                final_tracks=final_r,
+                windows=w,
+            )
+        )
+    return results

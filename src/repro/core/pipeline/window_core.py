@@ -1,0 +1,121 @@
+"""The per-window stage shared by every driver, plus the host-loop driver.
+
+``_window_core`` (conditioning -> clustering -> metrics) is the single
+definition of "process one window"; the scan, stream, and loop drivers
+all execute it — that shared core is what makes their bit-identity a
+structural property rather than a coincidence.
+
+``run_recording`` is the legacy host loop: dual-threshold batching with
+one jit dispatch (and host sync) per window. With :func:`make_process_window`
+memoized per config, repeated runs measure pure dispatch overhead — the
+baseline the scanned and streaming drivers are judged against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, Callable
+
+import jax
+import numpy as np
+
+from repro.core.events import EventBatch, dual_threshold_batches, roi_filter
+from repro.core.events import persistent_event_filter
+from repro.core.grid_clustering import Clusters, clusters_from_histogram, merge_adjacent
+from repro.core.pipeline.config import PipelineConfig, _histogram_fn, _metrics_fn
+from repro.core.tracking import TrackerConfig, TrackState, init_tracks, tracker_step
+
+if TYPE_CHECKING:  # avoid circular import (data.synthetic uses core.events)
+    from repro.data.synthetic import Recording
+
+
+def _condition(config: PipelineConfig, batch: EventBatch) -> EventBatch:
+    batch = roi_filter(batch, config.roi)
+    return persistent_event_filter(batch, config.hot_pixel_max)
+
+
+def _cluster(
+    config: PipelineConfig, hist_fn: Callable[[EventBatch], tuple], batch: EventBatch
+) -> Clusters:
+    clusters = clusters_from_histogram(*hist_fn(batch), config.grid)
+    if config.merge_neighbors:
+        clusters = merge_adjacent(clusters, config.grid)
+    return clusters
+
+
+def _window_core(
+    config: PipelineConfig,
+    hist_fn: Callable[[EventBatch], tuple],
+    metrics_fn: Callable[[EventBatch, Clusters], dict[str, jax.Array]],
+    batch: EventBatch,
+) -> tuple[Clusters, dict[str, jax.Array]]:
+    """The per-window computation shared by the loop/scan/stream drivers."""
+    batch = _condition(config, batch)
+    clusters = _cluster(config, hist_fn, batch)
+    mets = metrics_fn(batch, clusters)
+    return clusters, mets
+
+
+@functools.lru_cache(maxsize=None)
+def make_process_window(config: PipelineConfig = PipelineConfig()):
+    """Build the jit'd per-window stage: conditioning -> clusters -> metrics.
+
+    Memoized per config (like :func:`repro.core.pipeline.make_scan_fn`), so
+    callers that rebuild it per recording reuse the compiled closure
+    instead of re-tracing — the loop driver's cost is per-window dispatch,
+    not retracing.
+    """
+    hist_fn = _histogram_fn(config)
+    metrics_fn = _metrics_fn(config)
+
+    @jax.jit
+    def process_window(batch: EventBatch) -> tuple[Clusters, dict[str, jax.Array]]:
+        return _window_core(config, hist_fn, metrics_fn, batch)
+
+    return process_window
+
+
+@functools.lru_cache(maxsize=None)
+def _tracker_fn(config: TrackerConfig):
+    """Memoized jit'd tracker step (one compile per tracker config)."""
+    return jax.jit(functools.partial(tracker_step, config=config))
+
+
+@dataclasses.dataclass
+class WindowResult:
+    t_start_us: int
+    clusters: Clusters  # device arrays, K slots
+    metrics: dict[str, np.ndarray]
+    tracks: TrackState | None = None
+
+
+def run_recording(
+    recording: Recording,
+    config: PipelineConfig = PipelineConfig(),
+    with_tracking: bool = True,
+) -> list[WindowResult]:
+    """Host driver: dual-threshold batching + jit'd window stage + tracker.
+
+    One dispatch per window; see ``run_recording_scan`` for the
+    device-resident path with one dispatch per recording, and
+    ``StreamingPipeline`` for incremental chunked feeds.
+    """
+    process_window = make_process_window(config)
+    tracker_fn = _tracker_fn(config.tracker)
+    state = init_tracks(config.tracker)
+    results: list[WindowResult] = []
+    for batch, sl in dual_threshold_batches(
+        recording.x, recording.y, recording.t, recording.p, config.batcher
+    ):
+        clusters, mets = process_window(batch)
+        if with_tracking:
+            state, _ = tracker_fn(state, clusters, mets["shannon_entropy"])
+        results.append(
+            WindowResult(
+                t_start_us=int(recording.t[sl.start]),
+                clusters=clusters,
+                metrics={k: np.asarray(v) for k, v in mets.items()},
+                tracks=state if with_tracking else None,
+            )
+        )
+    return results

@@ -1,0 +1,310 @@
+"""Streaming engine: bit-identity with the scan driver under arbitrary
+chunkings (including chunks that split a dual-threshold window), batcher
+remainder semantics, tracker chaining, tag-epoch rollover, and
+overflow accounting."""
+import functools
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core.events import (
+    BatcherConfig,
+    dual_threshold_bounds,
+    dual_threshold_closed_bounds,
+    pad_windows,
+)
+from repro.core.pipeline import (
+    PipelineConfig,
+    StreamingPipeline,
+    run_recording_scan,
+)
+from repro.core.tracking import track_recording
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def _recording(seed: int = 3, duration_s: float = 0.35, n_rsos: int = 2):
+    from repro.data.synthetic import make_recording
+
+    return make_recording(seed=seed, duration_s=duration_s, n_rsos=n_rsos)
+
+
+def _feed_chunks(sp: StreamingPipeline, rec, cuts: list[int]):
+    """Feed a recording split at the given event indices; flush at the end."""
+    parts = []
+    prev = 0
+    for c in sorted(cuts) + [len(rec)]:
+        c = min(max(c, prev), len(rec))
+        parts.append(sp.feed(rec.x[prev:c], rec.y[prev:c], rec.t[prev:c], rec.p[prev:c]))
+        prev = c
+    parts.append(sp.flush())
+    return parts
+
+
+def _assert_stream_equals_scan(parts, scan, with_tracking=True):
+    assert sum(p.num_windows for p in parts) == scan.num_windows
+    t_start = np.concatenate([p.t_start_us for p in parts])
+    np.testing.assert_array_equal(t_start, scan.t_start_us)
+    starts = np.concatenate([p.windows.starts for p in parts])
+    stops = np.concatenate([p.windows.stops for p in parts])
+    np.testing.assert_array_equal(starts, scan.windows.starts)
+    np.testing.assert_array_equal(stops, scan.windows.stops)
+    for field in scan.clusters._fields:
+        cat = np.concatenate(
+            [np.asarray(getattr(p.clusters, field)) for p in parts]
+        )
+        np.testing.assert_array_equal(
+            cat, np.asarray(getattr(scan.clusters, field)),
+            err_msg=f"clusters.{field}",
+        )
+    for key in scan.metrics:
+        cat = np.concatenate([np.asarray(p.metrics[key]) for p in parts])
+        np.testing.assert_array_equal(
+            cat, np.asarray(scan.metrics[key]), err_msg=f"metrics[{key}]"
+        )
+    if with_tracking:
+        for field in scan.tracks._fields:
+            cat = np.concatenate(
+                [np.asarray(getattr(p.tracks, field)) for p in parts]
+            )
+            np.testing.assert_array_equal(
+                cat, np.asarray(getattr(scan.tracks, field)),
+                err_msg=f"tracks.{field}",
+            )
+        for field in scan.final_tracks._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(parts[-1].final_tracks, field)),
+                np.asarray(getattr(scan.final_tracks, field)),
+                err_msg=f"final_tracks.{field}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Incremental windower (batcher remainder semantics).
+# ---------------------------------------------------------------------------
+
+def test_closed_bounds_are_prefix_of_full_bounds():
+    rec = _recording()
+    cfg = BatcherConfig()
+    full = dual_threshold_bounds(rec.t, cfg)
+    for cut in (1, 7, len(rec) // 3, len(rec) - 1, len(rec)):
+        closed, consumed = dual_threshold_closed_bounds(rec.t[:cut], cfg)
+        assert closed == full[: len(closed)]
+        assert consumed == (closed[-1][1] if closed else 0)
+        # Whatever stays pending is exactly the un-emitted suffix.
+        assert consumed <= cut
+
+
+def test_closed_bounds_hold_back_open_window():
+    # 10 events all within 1 ms: neither the 20 ms nor the 250-event cut
+    # can prove the window closed — nothing is emitted.
+    t = np.arange(10, dtype=np.int64) * 100
+    closed, consumed = dual_threshold_closed_bounds(t, BatcherConfig())
+    assert closed == [] and consumed == 0
+    # An event past the time threshold closes it.
+    t2 = np.concatenate([t, [30_000]])
+    closed, consumed = dual_threshold_closed_bounds(t2, BatcherConfig())
+    assert closed == [(0, 10)] and consumed == 10
+
+
+def test_closed_bounds_size_cut_closes_without_later_event():
+    # Exactly size_threshold events inside the time window: size cut binds.
+    n = BatcherConfig().size_threshold
+    t = np.linspace(0, 1000, n).astype(np.int64)
+    closed, consumed = dual_threshold_closed_bounds(t, BatcherConfig())
+    assert closed == [(0, n)] and consumed == n
+
+
+# ---------------------------------------------------------------------------
+# Stream == scan bit-identity.
+# ---------------------------------------------------------------------------
+
+def test_single_feed_plus_flush_equals_scan():
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config)
+    sp = StreamingPipeline(config)
+    parts = _feed_chunks(sp, rec, [])
+    _assert_stream_equals_scan(parts, scan)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(0, 10_000_000), min_size=1, max_size=6))
+def test_chunked_feed_bit_identical_to_scan(raw_cuts):
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config)
+    cuts = [c % (len(rec) + 1) for c in raw_cuts]
+    sp = StreamingPipeline(config)
+    parts = _feed_chunks(sp, rec, cuts)
+    _assert_stream_equals_scan(parts, scan)
+
+
+def test_chunk_splitting_every_window_boundary_neighbourhood():
+    # Deliberately adversarial: cut one event past each window boundary,
+    # so every window is split across two feeds.
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config)
+    cuts = [int(s) + 1 for s in scan.windows.starts[1:]]
+    sp = StreamingPipeline(config)
+    parts = _feed_chunks(sp, rec, cuts)
+    _assert_stream_equals_scan(parts, scan)
+
+
+@pytest.mark.parametrize("impl", ["frame", "event"])
+def test_stream_matches_scan_across_metrics_impls(impl):
+    rec = _recording(seed=6, duration_s=0.25, n_rsos=1)
+    config = PipelineConfig(metrics_impl=impl)
+    scan = run_recording_scan(rec, config)
+    sp = StreamingPipeline(config)
+    parts = _feed_chunks(sp, rec, [len(rec) // 3, 2 * len(rec) // 3])
+    _assert_stream_equals_scan(parts, scan)
+
+
+def test_stream_without_tracking():
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config, with_tracking=False)
+    sp = StreamingPipeline(config, with_tracking=False)
+    parts = _feed_chunks(sp, rec, [len(rec) // 2])
+    assert all(p.tracks is None and p.final_tracks is None for p in parts)
+    _assert_stream_equals_scan(parts, scan, with_tracking=False)
+
+
+def test_feed_that_closes_no_window_returns_empty_result():
+    rec = _recording()
+    config = PipelineConfig()
+    sp = StreamingPipeline(config)
+    res = sp.feed(rec.x[:3], rec.y[:3], rec.t[:3], rec.p[:3])
+    assert res.num_windows == 0
+    assert res.clusters.count.shape[0] == 0
+    assert res.window_results() == []
+    assert sp.state.pending_count == 3
+    # The held-back events still come out right once the stream continues.
+    rest = sp.feed(rec.x[3:], rec.y[3:], rec.t[3:], rec.p[3:])
+    scan = run_recording_scan(rec, config)
+    _assert_stream_equals_scan([res, rest, sp.flush()], scan)
+
+
+def test_tag_epoch_rollover_keeps_identity():
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config)
+    sp = StreamingPipeline(config)
+    sp._tag_limit = 4  # force atlas re-zeroing every few windows
+    parts = _feed_chunks(sp, rec, list(range(0, len(rec), len(rec) // 5)))
+    assert sp.state.next_tag <= 4
+    _assert_stream_equals_scan(parts, scan)
+
+
+def test_feed_larger_than_tag_epoch_refuses_without_wedging():
+    # A single feed closing more windows than one tag epoch can address
+    # must error (silent int32 tag wrap would alias stale atlas pixels)
+    # WITHOUT absorbing the chunk — the stream stays usable and the same
+    # events can be re-fed in smaller pieces.
+    rec = _recording()
+    config = PipelineConfig()
+    sp = StreamingPipeline(config)
+    sp._tag_limit = 2
+    with pytest.raises(ValueError, match="tag epoch"):
+        sp.feed(rec.x, rec.y, rec.t, rec.p)
+    assert sp.state.pending_count == 0  # chunk rejected, not buffered
+    scan = run_recording_scan(rec, config)
+    parts = _feed_chunks(sp, rec, list(range(0, len(rec), len(rec) // 10)))
+    _assert_stream_equals_scan(parts, scan)
+
+
+def test_stream_state_resumes_in_new_pipeline():
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config)
+    half = len(rec) // 2
+    sp1 = StreamingPipeline(config)
+    first = sp1.feed(rec.x[:half], rec.y[:half], rec.t[:half], rec.p[:half])
+    # Hand the carry to a brand-new pipeline object (e.g. after a restart).
+    sp2 = StreamingPipeline(config, state=sp1.state)
+    rest = sp2.feed(rec.x[half:], rec.y[half:], rec.t[half:], rec.p[half:])
+    _assert_stream_equals_scan([first, rest, sp2.flush()], scan)
+
+
+# ---------------------------------------------------------------------------
+# Tracker chaining across segment boundaries (track_recording init=...).
+# ---------------------------------------------------------------------------
+
+def test_track_recording_chains_across_boundaries():
+    rec = _recording()
+    config = PipelineConfig()
+    scan = run_recording_scan(rec, config)
+    ent = scan.metrics["shannon_entropy"]
+    full_final, full_states = track_recording(scan.clusters, ent, config.tracker)
+    half = scan.num_windows // 2
+    head = jax.tree.map(lambda a: a[:half], scan.clusters)
+    tail = jax.tree.map(lambda a: a[half:], scan.clusters)
+    f1, s1 = track_recording(head, ent[:half], config.tracker)
+    f2, s2 = track_recording(tail, ent[half:], config.tracker, init=f1)
+    for field in full_final._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(f2, field)),
+            np.asarray(getattr(full_final, field)),
+            err_msg=f"final.{field}",
+        )
+        cat = np.concatenate(
+            [np.asarray(getattr(s1, field)), np.asarray(getattr(s2, field))]
+        )
+        np.testing.assert_array_equal(
+            cat, np.asarray(getattr(full_states, field)), err_msg=field
+        )
+
+
+# ---------------------------------------------------------------------------
+# Overflow accounting (no more silent event loss).
+# ---------------------------------------------------------------------------
+
+def test_pad_windows_dual_policy_has_zero_overflow():
+    rec = _recording()
+    windowed = pad_windows(rec.x, rec.y, rec.t, rec.p, BatcherConfig())
+    assert windowed.overflow is not None
+    np.testing.assert_array_equal(
+        windowed.overflow, np.zeros(windowed.num_windows, np.int64)
+    )
+
+
+def test_pad_windows_stride_policy_records_overflow():
+    # 100 events in one 20 ms stride window, capacity 16 -> 84 dropped.
+    n = 100
+    t = np.arange(n, dtype=np.int64) * 100
+    z = np.zeros(n, np.int32)
+    windowed = pad_windows(z, z, t, z, BatcherConfig(capacity=16), policy="stride")
+    np.testing.assert_array_equal(windowed.overflow, [84])
+    assert int(np.asarray(windowed.batch.valid).sum()) == 16
+
+
+def test_dual_policy_overflow_when_capacity_below_size_threshold():
+    # Degenerate config (capacity < size_threshold): dual windows truncate,
+    # and both the offline and the streaming windower must say so.
+    cfg = BatcherConfig(size_threshold=8, capacity=4)
+    config = PipelineConfig(batcher=cfg)
+    n = 64
+    t = np.arange(n, dtype=np.int64)  # 1 us apart: all size-cut windows
+    z = np.zeros(n, np.int32)
+    windowed = pad_windows(z, z, t, z, cfg)
+    np.testing.assert_array_equal(
+        windowed.overflow, np.full(windowed.num_windows, 4)
+    )
+    sp = StreamingPipeline(config)
+    res = sp.feed(z, z, t, z)
+    np.testing.assert_array_equal(
+        res.windows.overflow, np.full(res.num_windows, 4)
+    )
+    # Truncation is applied identically, so stream == scan still holds.
+    from repro.data.synthetic import Recording
+
+    rec = Recording(
+        x=z, y=z, t=t, p=z, kind=z, obj=z,
+        rso_tracks=np.zeros((0, 4)), duration_us=int(t[-1]), name="trunc",
+    )
+    scan = run_recording_scan(rec, config)
+    tail = sp.flush()
+    _assert_stream_equals_scan([res, tail], scan)
