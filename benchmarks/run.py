@@ -1,14 +1,37 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark aggregator: paper tables/figures + the gated perf benches.
 
-Prints ``name,us_per_call,derived`` CSV. Select subsets with
-``python -m benchmarks.run table1 fig10``.
+Two kinds of entries share this single entrypoint:
+
+* **table/figure modules** (``table1`` .. ``roofline``) — imported and
+  run in-process, printing ``name,us_per_call,derived`` CSV rows (the
+  paper-reproduction numbers).
+* **gated benches** (``scan`` / ``stream`` / ``fleet``) — run as
+  subprocesses writing ``BENCH_<name>.json`` at the repo root. Every
+  payload carries a uniform ``bench`` block — ``{name, p50_ms, p99_ms,
+  gates:[{name, value, threshold, op, pass}]}`` — which this aggregator
+  collects into one summary table. Each bench's own exit code is the
+  gate authority (env knobs like ``BENCH_NO_FAIL`` /
+  ``BENCH_GATE_SPEEDUP`` / ``BENCH_GATE_EVENT`` pass through and mean
+  the same thing here as when a bench is run directly); the aggregator
+  exits nonzero iff any subprocess did.
+
+Select subsets by key::
+
+  PYTHONPATH=src python -m benchmarks.run table1 fig10   # paper tables
+  PYTHONPATH=src python -m benchmarks.run scan stream fleet
+  PYTHONPATH=src python -m benchmarks.run                # everything
 """
 from __future__ import annotations
 
+import json
+import subprocess
 import sys
 import time
+from pathlib import Path
 
 from benchmarks._common import emit
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 MODULES = {
     "table1": "benchmarks.table1_algorithms",
@@ -20,20 +43,81 @@ MODULES = {
     "roofline": "benchmarks.roofline_report",
 }
 
+# Gated benches: script + the BENCH_*.json it writes (uniform `bench`
+# block inside). Registered here so one command runs the whole gate set.
+BENCHES = {
+    "scan": ("scan_throughput.py", "BENCH_scan.json"),
+    "stream": ("stream_latency.py", "BENCH_stream.json"),
+    "fleet": ("fleet_throughput.py", "BENCH_fleet.json"),
+}
+
+
+def _run_module(key: str) -> None:
+    t0 = time.time()
+    mod = __import__(MODULES[key], fromlist=["bench"])
+    try:
+        rows = mod.bench()
+    except Exception as e:  # noqa: BLE001
+        rows = [(f"{key}/ERROR", 0.0, f"{type(e).__name__}_{e}")]
+    emit(rows)
+    print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+def _run_bench(key: str) -> tuple[dict | None, bool]:
+    """Run one gated bench as a subprocess.
+
+    Returns ``(bench block, ok)``: the bench's own exit code decides
+    ``ok`` (so its gate knobs behave identically under the aggregator),
+    and the block is parsed from the written json when available.
+    """
+    script, json_name = BENCHES[key]
+    t0 = time.time()
+    proc = subprocess.run(
+        [sys.executable, str(Path(__file__).parent / script)], cwd=REPO_ROOT
+    )
+    print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    path = REPO_ROOT / json_name
+    block = json.loads(path.read_text()).get("bench") if path.exists() else None
+    return block, proc.returncode == 0
+
 
 def main() -> None:
-    selected = sys.argv[1:] or list(MODULES)
-    print("name,us_per_call,derived")
+    selected = sys.argv[1:] or [*MODULES, *BENCHES]
+    unknown = [k for k in selected if k not in MODULES and k not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown benchmark keys: {unknown}; "
+                 f"choose from {[*MODULES, *BENCHES]}")
+
+    if any(k in MODULES for k in selected):
+        print("name,us_per_call,derived")
+    summaries: list[tuple[str, dict | None, bool]] = []
     for key in selected:
-        mod_name = MODULES[key]
-        t0 = time.time()
-        mod = __import__(mod_name, fromlist=["bench"])
-        try:
-            rows = mod.bench()
-        except Exception as e:  # noqa: BLE001
-            rows = [(f"{key}/ERROR", 0.0, f"{type(e).__name__}_{e}")]
-        emit(rows)
-        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        if key in MODULES:
+            _run_module(key)
+        else:
+            block, ok = _run_bench(key)
+            summaries.append((key, block, ok))
+
+    if not summaries:
+        return
+    print(f"\n{'bench':<18} {'p50 ms':>9} {'p99 ms':>9}  gates")
+    failed = False
+    for key, block, ok in summaries:
+        failed |= not ok
+        if block is None:
+            print(f"{key:<18} {'-':>9} {'-':>9}  ERROR (no BENCH json)")
+            continue
+        gates = "; ".join(
+            f"{g['name']} {g['value']} {g['op']} {g['threshold']} "
+            f"[{'PASS' if g['pass'] else 'FAIL'}]"
+            for g in block.get("gates", [])
+        )
+        print(
+            f"{block['name']:<18} {block['p50_ms']:>9} {block['p99_ms']:>9}  "
+            f"{gates}{'' if ok else '  << exit 1'}"
+        )
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

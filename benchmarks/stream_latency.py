@@ -112,6 +112,20 @@ def main() -> None:
             "p99": round(p99, 3),
             "max": round(peak, 3),
         },
+        "bench": {
+            "name": "stream_latency",
+            "p50_ms": round(p50, 3),
+            "p99_ms": round(p99, 3),
+            "gates": [
+                {
+                    "name": "feed_p99_within_budget",
+                    "value": round(p99, 3),
+                    "threshold": BUDGET_MS,
+                    "op": "<=",
+                    "pass": ok,
+                },
+            ],
+        },
     }
     out_path = REPO_ROOT / "BENCH_stream.json"
     out_path.write_text(json.dumps(payload, indent=2) + "\n")

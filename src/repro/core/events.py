@@ -192,8 +192,23 @@ def coincidence_counts(
 
     Events with ``weight`` False get an arbitrary count and are never
     leaders. 1-D inputs only (vmap over a window axis for batches).
+
+    At window capacities (E <= ``_PAIRWISE_MAX_EVENTS``) on CPU the
+    same contract is served by one (E, E) pairwise compare block —
+    cache-resident, no sort. XLA's
+    CPU sort is the single most expensive op in the vmapped fleet step,
+    so the pairwise route is worth a branch; both produce the identical
+    exact integers and the identical lowest-index-per-pixel leader, so
+    every driver stays bit-identical whichever branch compiles.
     """
     e = x.shape[-1]
+    if e <= _PAIRWISE_MAX_EVENTS and jax.default_backend() == "cpu":
+        key = pack_words(x, y)
+        same = (key[:, None] == key[None, :]) & weight[None, :]  # (i, j)
+        counts = jnp.sum(same, axis=-1, dtype=jnp.int32)
+        earlier = jnp.tril(same, k=-1)  # weighted same-pixel j < i
+        leader = weight & ~jnp.any(earlier, axis=-1)
+        return counts, leader
     sentinel = jnp.uint32(0xFFFFFFFF)
     key = jnp.where(weight, pack_words(x, y), sentinel)
     perm = jnp.argsort(key)
@@ -218,6 +233,52 @@ class BatcherConfig:
     time_threshold_us: int = DEFAULT_TIME_THRESHOLD_US
     size_threshold: int = DEFAULT_SIZE_THRESHOLD
     capacity: int = DEFAULT_CAPACITY
+
+
+def monotone_merge(
+    pending: tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray],
+    x: np.ndarray,
+    y: np.ndarray,
+    t: np.ndarray,
+    p: np.ndarray,
+    last_t: int | None = None,
+    label: str = "feed",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Validate + append a raw chunk onto the batcher remainder.
+
+    The dual-threshold batcher requires time-sorted input; an
+    out-of-order chunk would silently land events in the wrong window
+    (the window boundaries are computed from ``searchsorted`` over the
+    merged buffer). This is the one merge point every streaming driver
+    goes through, so the contract is enforced here: timestamps must be
+    non-decreasing *within* the chunk and must not precede ``last_t``,
+    the newest timestamp already absorbed by the stream (which may
+    belong to an already-processed window, not just the remainder).
+    Raises ``ValueError`` before any state is touched — the caller's
+    carry stays valid and the offending chunk is not absorbed.
+    """
+    px, py, pt, pp = pending
+    t = np.asarray(t, np.int64)
+    if len(t):
+        if len(t) > 1 and np.any(t[1:] < t[:-1]):
+            bad = int(np.argmax(t[1:] < t[:-1]))
+            raise ValueError(
+                f"{label}: chunk timestamps are not non-decreasing "
+                f"(t[{bad + 1}]={int(t[bad + 1])} < t[{bad}]={int(t[bad])}); "
+                "events must be time-sorted"
+            )
+        if last_t is not None and int(t[0]) < last_t:
+            raise ValueError(
+                f"{label}: chunk starts at t={int(t[0])} us, before the "
+                f"stream's newest absorbed timestamp {last_t} us; feeds "
+                "must be monotonically non-decreasing across boundaries"
+            )
+    return (
+        np.concatenate([px, np.asarray(x, np.int64)]),
+        np.concatenate([py, np.asarray(y, np.int64)]),
+        np.concatenate([pt, t]),
+        np.concatenate([pp, np.asarray(p, np.int64)]),
+    )
 
 
 def dual_threshold_bounds(
@@ -377,6 +438,61 @@ class WindowedEvents(NamedTuple):
         return self.batch.x.shape[-1]
 
 
+def pack_bounds_into(
+    x: np.ndarray,
+    y: np.ndarray,
+    t: np.ndarray,
+    p: np.ndarray,
+    bounds: list[tuple[int, int, int]],
+    bx: np.ndarray,
+    by: np.ndarray,
+    bt: np.ndarray,
+    bp: np.ndarray,
+    bv: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy core of :func:`pack_bounds`: scatter windows into preallocated
+    (>= W, capacity) arrays (rows past ``len(bounds)`` are left untouched).
+
+    Shared by the single-recording packer and the fleet engine, which
+    packs every sensor into one (S, W_max, capacity) block so the whole
+    fleet transfers to device as five arrays, not five per sensor.
+    Returns ``(starts, stops, t_start, overflow)``.
+    """
+    w = len(bounds)
+    cap = bx.shape[-1]
+    if w == 1:
+        # Single-window fast path — the steady live-feed case (one
+        # window closes per 20 ms chunk), hit once per sensor per fleet
+        # round: plain slice assignments, no scatter-index build.
+        s0, e0, t0 = bounds[0]
+        n0 = min(e0 - s0, cap)
+        bx[0, :n0] = x[s0:s0 + n0]
+        by[0, :n0] = y[s0:s0 + n0]
+        bt[0, :n0] = t[s0:s0 + n0] - t0
+        bp[0, :n0] = p[s0:s0 + n0]
+        bv[0, :n0] = True
+        return (
+            np.array([s0], np.int64), np.array([e0], np.int64),
+            np.array([t0], np.int64), np.array([e0 - s0 - n0], np.int64),
+        )
+    starts = np.fromiter((b[0] for b in bounds), np.int64, count=w)
+    stops = np.fromiter((b[1] for b in bounds), np.int64, count=w)
+    t_start = np.fromiter((b[2] for b in bounds), np.int64, count=w)
+    n = np.minimum(stops - starts, cap)
+    overflow = stops - starts - n
+    total = int(n.sum())
+    if total:
+        rows = np.repeat(np.arange(w), n)
+        cols = np.arange(total) - np.repeat(np.cumsum(n) - n, n)
+        src = np.repeat(starts, n) + cols
+        bx[rows, cols] = x[src]
+        by[rows, cols] = y[src]
+        bt[rows, cols] = t[src] - np.repeat(t_start, n)
+        bp[rows, cols] = p[src]
+        bv[rows, cols] = True
+    return starts, stops, t_start, overflow
+
+
 def pack_bounds(
     x: np.ndarray,
     y: np.ndarray,
@@ -393,27 +509,14 @@ def pack_bounds(
     the per-window drop count recorded in ``overflow``.
     """
     w = len(bounds)
-    cap = capacity
-    bx = np.zeros((w, cap), np.int32)
-    by = np.zeros((w, cap), np.int32)
-    bt = np.zeros((w, cap), np.int32)
-    bp = np.zeros((w, cap), np.int32)
-    bv = np.zeros((w, cap), bool)
-    starts = np.fromiter((b[0] for b in bounds), np.int64, count=w)
-    stops = np.fromiter((b[1] for b in bounds), np.int64, count=w)
-    t_start = np.fromiter((b[2] for b in bounds), np.int64, count=w)
-    n = np.minimum(stops - starts, cap)
-    overflow = stops - starts - n
-    total = int(n.sum())
-    if total:
-        rows = np.repeat(np.arange(w), n)
-        cols = np.arange(total) - np.repeat(np.cumsum(n) - n, n)
-        src = np.repeat(starts, n) + cols
-        bx[rows, cols] = x[src]
-        by[rows, cols] = y[src]
-        bt[rows, cols] = t[src] - np.repeat(t_start, n)
-        bp[rows, cols] = p[src]
-        bv[rows, cols] = True
+    bx = np.zeros((w, capacity), np.int32)
+    by = np.zeros((w, capacity), np.int32)
+    bt = np.zeros((w, capacity), np.int32)
+    bp = np.zeros((w, capacity), np.int32)
+    bv = np.zeros((w, capacity), bool)
+    starts, stops, t_start, overflow = pack_bounds_into(
+        x, y, t, p, bounds, bx, by, bt, bp, bv
+    )
     batch = EventBatch(
         jnp.asarray(bx), jnp.asarray(by), jnp.asarray(bt), jnp.asarray(bp),
         jnp.asarray(bv),

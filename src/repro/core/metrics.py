@@ -260,14 +260,26 @@ def _exact_cluster_metrics(
     gx, gy = _sobel(cnt_patch)
     e2 = (gx * gx + gy * gy) / (norm * norm) + 1e-12  # squared magnitude
     g = jnp.sqrt(e2)
-    m1 = jnp.mean(g)
-    var_g = jnp.maximum(jnp.mean(e2) - m1 * m1, 1e-12)
+    # One variadic reduce for sum(g) / sum(e2) / max(e2): three separate
+    # jnp reductions each force the whole e2/g field to materialize and
+    # be re-read, which costs more than the Sobel itself on CPU; a
+    # single fused reduce streams the field once. (Float summation
+    # order is unspecified either way; every metrics path shares this
+    # function, so cross-driver bit-identity is structural.)
+    s_g, s_e2, mx_e2 = jax.lax.reduce(
+        (g, e2, e2),
+        (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(-jnp.inf)),
+        lambda a, b: (a[0] + b[0], a[1] + b[1], jnp.maximum(a[2], b[2])),
+        (0, 1),
+    )
+    m1 = s_g / n
+    var_g = jnp.maximum(s_e2 / n - m1 * m1, 1e-12)
     diff_entropy = 0.5 * jnp.log2(2.0 * jnp.pi * jnp.e * var_g)
 
     # Edge density: g / max(g.max(), 1e-3) > t, evaluated in squared
     # magnitude space (sqrt is monotone, so max commutes; the count of
     # edge pixels is an exact integer sum).
-    den = jnp.maximum(jnp.sqrt(jnp.max(e2)), 1e-3)
+    den = jnp.maximum(jnp.sqrt(mx_e2), 1e-3)
     thr = (EDGE_THRESHOLD * den) * (EDGE_THRESHOLD * den)
     edges = jnp.sum((e2 > thr).astype(jnp.float32))
     edge_density_v = edges / n

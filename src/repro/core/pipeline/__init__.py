@@ -19,6 +19,9 @@ Layers (each also importable directly):
   persistent tagged atlas (DESIGN.md Sec. 5).
 * ``stream``      — :class:`StreamingPipeline`: resumable chunked feeds,
   bit-identical to the scan driver for any chunking.
+* ``fleet``       — :class:`FleetPipeline`: N live sensors through one
+  vmapped/jitted step with sensor-sharded stacked carries,
+  bit-identical per sensor to N independent streaming pipelines.
 * ``evaluate``    — device-resident candidate truth-matching, scoring,
   and the O(1)-dispatch :func:`threshold_sweep`.
 * ``oracles``     — host-side (numpy / Python-loop) matching oracles.
@@ -52,16 +55,28 @@ from repro.core.pipeline.scan import (  # noqa: F401
 from repro.core.pipeline.stream import (  # noqa: F401
     StreamState,
     StreamingPipeline,
+    empty_scan_result,
+    tag_limit,
+)
+from repro.core.pipeline.fleet import (  # noqa: F401
+    FleetPipeline,
+    FleetResult,
+    FleetState,
+    SensorCursor,
+    make_fleet_fn,
 )
 from repro.core.pipeline.evaluate import (  # noqa: F401
     Candidates,
     DetectionScore,
     collect_candidates,
+    collect_candidates_fleet,
     collect_candidates_many,
     evaluate_detection,
     merge_candidates,
     score_threshold,
     threshold_sweep,
+    track_positions,
+    track_table,
 )
 from repro.core.pipeline.oracles import (  # noqa: F401
     collect_candidates_loop,

@@ -10,10 +10,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics as M
-from repro.core.events import EventBatch
+from repro.core.events import _PAIRWISE_MAX_EVENTS, EventBatch, roi_filter
 from repro.core.pipeline.config import PipelineConfig, _histogram_fn
 from repro.core.pipeline.window_core import _cluster, _condition
 from repro.core.tracking import TrackState, tracker_step
+
+
+def _fused_condition_normalizer(config: PipelineConfig, width: int, height: int):
+    """Conditioning + event normalizer sharing ONE (E, E) same-pixel block.
+
+    :func:`~repro.core.events.persistent_event_filter` (hot-pixel rate)
+    and :func:`~repro.core.metrics.coincidence_counts` (normalizer /
+    leaders) each build the identical pairwise same-pixel compare matrix
+    at window capacities; on CPU that redundant (E, E) pass is a
+    measurable slice of the fleet step. This fused form computes the
+    matrix once and reuses it for both — every output is the exact same
+    integer/boolean the two-pass route produces (the hot-pixel count
+    weights by pre-filter validity, the coincidence count and the
+    lowest-index leader by post-filter in-bounds validity), so all
+    drivers remain bit-identical. Returns ``(batch, c, leader, w, norm)``
+    like ``_condition`` + ``event_normalizer`` chained.
+    """
+
+    def run(batch: EventBatch):
+        batch = roi_filter(batch, config.roi)
+        same = (batch.x[:, None] == batch.x[None, :]) & (
+            batch.y[:, None] == batch.y[None, :]
+        )
+        hot = jnp.sum(same & batch.valid[None, :], axis=-1)
+        batch = batch._replace(valid=batch.valid & (hot <= config.hot_pixel_max))
+        inb = (
+            (batch.x >= 0) & (batch.x < width)
+            & (batch.y >= 0) & (batch.y < height)
+        )
+        w = batch.valid & inb
+        sw = same & w[None, :]
+        c = jnp.sum(sw, axis=-1, dtype=jnp.int32)
+        leader = w & ~jnp.any(jnp.tril(sw, k=-1), axis=-1)
+        norm = jnp.maximum(jnp.max(jnp.where(w, c, 0)).astype(jnp.float32), 1.0)
+        return batch, c, leader, w, norm
+
+    return run
 
 
 def _make_event_core(config: PipelineConfig, with_tracking: bool):
@@ -65,10 +102,19 @@ def _make_event_core(config: PipelineConfig, with_tracking: bool):
             lambda a: a.reshape(n_chunks, chunk, *a.shape[1:]), padded
         )
 
+        fused = (
+            _fused_condition_normalizer(config, width, height)
+            if cap <= _PAIRWISE_MAX_EVENTS and jax.default_backend() == "cpu"
+            else None
+        )
+
         def phase_window(batch: EventBatch):
-            batch = _condition(config, batch)
+            if fused is not None:
+                batch, c, leader, wmask, norm = fused(batch)
+            else:
+                batch = _condition(config, batch)
+                c, leader, wmask, norm = M.event_normalizer(batch, width, height)
             clusters = _cluster(config, hist_fn, batch)
-            c, leader, wmask, norm = M.event_normalizer(batch, width, height)
             x0, y0 = M.window_origin(
                 clusters.centroid_x, clusters.centroid_y, width, height
             )

@@ -12,7 +12,13 @@ import numpy as np
 
 from repro.core.events import dual_threshold_batches
 from repro.core.pipeline.config import PipelineConfig
-from repro.core.pipeline.evaluate import Candidates, _floor_config, _visible_objects
+from repro.core.pipeline.evaluate import (
+    Candidates,
+    _floor_config,
+    _visible_objects,
+    track_positions,
+    track_table,
+)
 from repro.core.pipeline.scan import run_recording_scan
 from repro.core.pipeline.window_core import make_process_window
 
@@ -48,15 +54,14 @@ def collect_candidates_numpy(
     ct = np.asarray(result.clusters.centroid_t, np.float64)
     w_count, k = counts.shape if counts.ndim == 2 else (0, 0)
 
-    tracks = np.asarray(recording.rso_tracks, np.float64).reshape(-1, 4)
+    tracks = track_table(recording.rso_tracks)
     n_rso = tracks.shape[0]
 
     # Cluster-level: match every (window, slot) centroid against every RSO
     # trajectory at the cluster's mean event time.
     t_ev = windows.t_start_us[:, None].astype(np.float64) + ct  # (W, K)
     ts = t_ev[:, :, None] * 1e-6  # seconds, (W, K, 1)
-    px = tracks[None, None, :, 0] + tracks[None, None, :, 2] * ts  # (W, K, R)
-    py = tracks[None, None, :, 1] + tracks[None, None, :, 3] * ts
+    px, py = track_positions(tracks[None, None, :, :], ts)  # (W, K, R)
     matched = (
         np.hypot(px - cx[:, :, None], py - cy[:, :, None]) <= gate_px
     )  # (W, K, R)
@@ -72,7 +77,7 @@ def collect_candidates_numpy(
     counts_out = counts.reshape(-1)[keep_flat].astype(np.int32)
     is_rso = matched.any(axis=-1).reshape(-1)[keep_flat]
 
-    visible = _visible_objects(recording, windows, n_rso, min_truth_events)
+    visible = _visible_objects(recording, windows.stops, n_rso, min_truth_events)
     contrib = np.where(
         matched & keep[:, :, None], counts[:, :, None], 0
     )  # (W, K, R)
@@ -106,7 +111,7 @@ def collect_candidates_loop(
     counts_out: list[int] = []
     truth_out: list[bool] = []
     object_best: list[int] = []
-    n_rso = np.asarray(recording.rso_tracks).reshape(-1, 4).shape[0]
+    n_rso = track_table(recording.rso_tracks).shape[0]
 
     for batch, sl in dual_threshold_batches(
         recording.x, recording.y, recording.t, recording.p, floor_cfg.batcher

@@ -38,6 +38,7 @@ from repro.core.events import (
     WindowedEvents,
     dual_threshold_bounds,
     dual_threshold_closed_bounds,
+    monotone_merge,
     pack_bounds,
 )
 from repro.core.grid_clustering import Clusters
@@ -46,6 +47,46 @@ from repro.core.pipeline.scan import ScanResult, make_atlas, make_stream_fn
 from repro.core.tracking import TrackState, init_tracks
 
 _EMPTY = np.zeros(0, np.int64)
+
+
+def tag_limit(config: PipelineConfig) -> int:
+    """Windows addressable within one atlas tag epoch for this config.
+
+    Tags are encoded as ``(tag + 1) << shift`` in int32 (``shift`` bits
+    hold the per-pixel count); the streaming drivers must wrap to a fresh
+    epoch — atlas re-zeroed so stale pixels cannot alias fresh tags —
+    before the encoding overflows.
+    """
+    shift = max(config.batcher.capacity.bit_length(), 1)
+    return (1 << (31 - shift)) - 2
+
+
+def empty_scan_result(
+    config: PipelineConfig,
+    with_tracking: bool,
+    tracks: TrackState,
+    windows: WindowedEvents,
+) -> ScanResult:
+    """Zero-window ScanResult (a feed that closed nothing): empty stacked
+    outputs with the caller's carry passed through as ``final_tracks``."""
+    k = config.grid.max_clusters
+    f32 = lambda: jnp.zeros((0, k), jnp.float32)
+    i32 = lambda: jnp.zeros((0, k), jnp.int32)
+    clusters = Clusters(
+        centroid_x=f32(), centroid_y=f32(), centroid_t=f32(),
+        count=i32(), cell_x=i32(), cell_y=i32(),
+        valid=jnp.zeros((0, k), bool),
+    )
+    mets = {name: f32() for name in M.METRIC_NAMES}
+    states = jax.tree.map(lambda a: jnp.zeros((0,) + a.shape, a.dtype), tracks)
+    return ScanResult(
+        t_start_us=windows.t_start_us,
+        clusters=clusters,
+        metrics=mets,
+        tracks=states if with_tracking else None,
+        final_tracks=tracks if with_tracking else None,
+        windows=windows,
+    )
 
 
 @dataclasses.dataclass
@@ -57,6 +98,7 @@ class StreamState:
     next_tag: int  # next atlas tag (epoch-local: resets at tag rollover)
     atlas: jax.Array  # persistent tagged event surface
     tracks: TrackState
+    last_t: int | None = None  # newest absorbed timestamp (feed monotonicity)
 
     @property
     def pending_count(self) -> int:
@@ -86,12 +128,7 @@ class StreamingPipeline:
         self.config = config
         self.with_tracking = with_tracking
         self._step = make_stream_fn(config, with_tracking)
-        cap = config.batcher.capacity
-        shift = max(cap.bit_length(), 1)
-        # Tags are encoded as (tag + 1) << shift in int32: wrap before the
-        # encoding overflows (the atlas is re-zeroed so stale pixels from
-        # the previous tag epoch cannot alias fresh tags).
-        self._tag_limit = (1 << (31 - shift)) - 2
+        self._tag_limit = tag_limit(config)
         self.state = self.init_state() if state is None else state
 
     def init_state(self) -> StreamState:
@@ -108,19 +145,18 @@ class StreamingPipeline:
     ) -> ScanResult:
         """Ingest a raw event chunk; process and return the closed windows.
 
-        Events must be time-sorted and non-decreasing across feeds. A feed
-        may close zero windows (chunk too small/recent) — the result is
-        then empty and the events wait in the batcher remainder. A feed
-        that would close more windows than one tag epoch can address
-        raises ``ValueError`` *without absorbing the chunk*, so the caller
-        can re-feed it in smaller pieces.
+        Events must be time-sorted within the chunk and non-decreasing
+        across feeds; a chunk violating either raises ``ValueError``
+        before any state changes (silent mis-windowing would otherwise
+        corrupt every window downstream of the disorder). A feed may
+        close zero windows (chunk too small/recent) — the result is then
+        empty and the events wait in the batcher remainder. A feed that
+        would close more windows than one tag epoch can address raises
+        ``ValueError`` *without absorbing the chunk*, so the caller can
+        re-feed it in smaller pieces.
         """
-        px, py, pt, pp = self.state.pending
-        merged = (
-            np.concatenate([px, np.asarray(x, np.int64)]),
-            np.concatenate([py, np.asarray(y, np.int64)]),
-            np.concatenate([pt, np.asarray(t, np.int64)]),
-            np.concatenate([pp, np.asarray(p, np.int64)]),
+        merged = monotone_merge(
+            self.state.pending, x, y, t, p, self.state.last_t
         )
         bounds, consumed = dual_threshold_closed_bounds(
             merged[2], self.config.batcher
@@ -156,6 +192,7 @@ class StreamingPipeline:
             )
         st = self.state
         px, py, pt, pp = pending
+        last_t = int(pt[-1]) if len(pt) else st.last_t
         windows = pack_bounds(
             px, py, pt, pp,
             [(s, e, int(pt[s])) for s, e in bounds],
@@ -170,8 +207,12 @@ class StreamingPipeline:
         if n == 0:
             # Absorb the new events into the remainder even when nothing
             # closed yet.
-            self.state = dataclasses.replace(st, pending=pending)
-            return self._empty_result(windows)
+            self.state = dataclasses.replace(
+                st, pending=pending, last_t=last_t
+            )
+            return empty_scan_result(
+                self.config, self.with_tracking, st.tracks, windows
+            )
 
         atlas, tag0 = st.atlas, st.next_tag
         if tag0 + n > self._tag_limit:  # tag epoch rollover
@@ -186,6 +227,7 @@ class StreamingPipeline:
             next_tag=tag0 + n,
             atlas=atlas,
             tracks=final,
+            last_t=last_t,
         )
         return ScanResult(
             t_start_us=windows.t_start_us,
@@ -193,27 +235,5 @@ class StreamingPipeline:
             metrics=mets,
             tracks=states if self.with_tracking else None,
             final_tracks=final if self.with_tracking else None,
-            windows=windows,
-        )
-
-    def _empty_result(self, windows: WindowedEvents) -> ScanResult:
-        k = self.config.grid.max_clusters
-        f32 = lambda: jnp.zeros((0, k), jnp.float32)
-        i32 = lambda: jnp.zeros((0, k), jnp.int32)
-        clusters = Clusters(
-            centroid_x=f32(), centroid_y=f32(), centroid_t=f32(),
-            count=i32(), cell_x=i32(), cell_y=i32(),
-            valid=jnp.zeros((0, k), bool),
-        )
-        mets = {name: f32() for name in M.METRIC_NAMES}
-        states = jax.tree.map(
-            lambda a: jnp.zeros((0,) + a.shape, a.dtype), self.state.tracks
-        )
-        return ScanResult(
-            t_start_us=windows.t_start_us,
-            clusters=clusters,
-            metrics=mets,
-            tracks=states if self.with_tracking else None,
-            final_tracks=self.state.tracks if self.with_tracking else None,
             windows=windows,
         )

@@ -169,6 +169,46 @@ def named(mesh: Mesh, spec: P) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Fleet (multi-sensor streaming) carry sharding.
+# ---------------------------------------------------------------------------
+
+# The streaming fleet engine stacks per-sensor carries (event atlas,
+# tracker state) along a leading sensor dim and drives them through one
+# vmapped step. Sensors are embarrassingly parallel — no cross-sensor
+# collective anywhere in the step — so the whole carry shards 1:1 over a
+# dedicated mesh axis and each device serves S / axis_size sensors.
+SENSOR_AXIS = "sensor"
+
+
+def shard_fleet_carry(tree: Any, mesh: Mesh | None) -> Any:
+    """Place a stacked fleet carry pytree on ``mesh``, sensor-sharded.
+
+    Every leaf has the sensor dim leading; leaves whose sensor count does
+    not divide the axis (or meshes without a ``sensor`` axis) fall back
+    to replication, mirroring :func:`partition_params`' divisibility
+    rule. With ``mesh=None`` this is the identity, so the fleet engine
+    runs unchanged on a single host.
+    """
+    if mesh is None or SENSOR_AXIS not in mesh.axis_names:
+        return tree
+    size = dict(zip(mesh.axis_names, mesh.devices.shape))[SENSOR_AXIS]
+
+    def place(leaf):
+        ok = getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] % size == 0
+        return jax.device_put(
+            leaf, NamedSharding(mesh, P(SENSOR_AXIS) if ok else P())
+        )
+
+    return jax.tree.map(place, tree)
+
+
+def hint_fleet(tree: Any) -> Any:
+    """Sensor-axis sharding hint over every leaf of a stacked fleet pytree
+    (identity without an active mesh; see :func:`hint`)."""
+    return jax.tree.map(lambda a: hint(a, SENSOR_AXIS), tree)
+
+
+# ---------------------------------------------------------------------------
 # Activation sharding hints (no-ops without a mesh context).
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,78 @@
+"""DetectionScore zero-division edges and merge_candidates degenerate
+inputs (empty list / single element)."""
+import numpy as np
+
+from repro.core.pipeline import (
+    Candidates,
+    DetectionScore,
+    merge_candidates,
+    score_threshold,
+)
+
+
+def test_detection_score_all_zero_is_defined():
+    s = DetectionScore()
+    assert s.accuracy == 0.0
+    assert s.precision == 0.0
+    assert s.recall == 0.0
+
+
+def test_precision_zero_division_no_positives():
+    # Detector fired nothing: precision denominator tp + fp == 0.
+    s = DetectionScore(tp=0, fp=0, fn=7, tn=3)
+    assert s.precision == 0.0
+    assert s.recall == 0.0
+    assert s.accuracy == 3 / 10
+
+
+def test_recall_zero_division_no_truth():
+    # No true objects at all: recall denominator tp + fn == 0.
+    s = DetectionScore(tp=0, fp=4, fn=0, tn=6)
+    assert s.recall == 0.0
+    assert s.precision == 0.0
+    assert s.accuracy == 0.6
+
+
+def test_perfect_scores():
+    s = DetectionScore(tp=5, fp=0, fn=0, tn=5)
+    assert s.precision == 1.0
+    assert s.recall == 1.0
+    assert s.accuracy == 1.0
+
+
+def test_merge_candidates_empty_list():
+    merged = merge_candidates([])
+    assert merged.counts.shape == (0,) and merged.counts.dtype == np.int32
+    assert merged.is_rso.shape == (0,) and merged.is_rso.dtype == np.bool_
+    assert merged.object_best.shape == (0,)
+    s = score_threshold(merged, 5)
+    assert (s.tp, s.fp, s.fn, s.tn) == (0, 0, 0, 0)
+    assert s.accuracy == 0.0  # not a ZeroDivisionError
+
+
+def test_merge_candidates_single_element_is_identity():
+    cand = Candidates(
+        counts=np.array([3, 7, 12], np.int32),
+        is_rso=np.array([False, True, True]),
+        object_best=np.array([7, 12], np.int32),
+    )
+    merged = merge_candidates([cand])
+    np.testing.assert_array_equal(merged.counts, cand.counts)
+    np.testing.assert_array_equal(merged.is_rso, cand.is_rso)
+    np.testing.assert_array_equal(merged.object_best, cand.object_best)
+    s = score_threshold(merged, 5)
+    assert (s.tp, s.fp, s.fn, s.tn) == (2, 0, 0, 1)
+
+
+def test_merge_candidates_concatenates_in_order():
+    a = Candidates(
+        np.array([1], np.int32), np.array([True]), np.array([1], np.int32)
+    )
+    b = Candidates(
+        np.array([9, 2], np.int32), np.array([False, True]),
+        np.array([], np.int32),
+    )
+    merged = merge_candidates([a, b])
+    np.testing.assert_array_equal(merged.counts, [1, 9, 2])
+    np.testing.assert_array_equal(merged.is_rso, [True, False, True])
+    np.testing.assert_array_equal(merged.object_best, [1])

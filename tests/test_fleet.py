@@ -1,0 +1,271 @@
+"""Fleet engine: per-sensor bit-identity with N independent streaming
+pipelines (and hence with the scan driver) under arbitrary feed
+interleavings — idle sensors, chunks splitting windows, a sensor
+mid-tag-rollover — plus atomic feed validation and sensor-sharded
+carries."""
+import functools
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from test_streaming import _assert_stream_equals_scan
+
+from repro.core.pipeline import (
+    FleetPipeline,
+    PipelineConfig,
+    StreamingPipeline,
+    run_recording_scan,
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_recordings(n: int = 4, duration_s: float = 0.3):
+    from repro.data.synthetic import make_recording
+
+    return tuple(
+        make_recording(seed=20 + s, duration_s=duration_s, n_rsos=1 + s % 2)
+        for s in range(n)
+    )
+
+
+def _interleave(fp: FleetPipeline, recs, cuts_per_sensor, idle=()):
+    """Feed every sensor its recording split at per-sensor cut indices.
+
+    ``cuts_per_sensor[s]`` is a list of event indices; feeds are aligned
+    round-robin (feed i takes sensor s from its previous cut to cut i),
+    ``idle`` marks (feed, sensor) pairs fed ``None`` that round (their
+    chunk shifts to the next feed). Ends with a flush. Returns per-sensor
+    lists of ScanResults.
+    """
+    s_count = len(recs)
+    n_feeds = max(len(c) for c in cuts_per_sensor) + 1
+    prev = [0] * s_count
+    parts = [[] for _ in range(s_count)]
+    for i in range(n_feeds):
+        chunks = []
+        for s, rec in enumerate(recs):
+            if (i, s) in idle and i < n_feeds - 1:
+                chunks.append(None)
+                continue
+            cut = (
+                len(rec)
+                if i >= len(cuts_per_sensor[s])
+                else min(max(cuts_per_sensor[s][i], prev[s]), len(rec))
+            )
+            if i == n_feeds - 1:
+                cut = len(rec)
+            chunks.append(
+                (rec.x[prev[s]:cut], rec.y[prev[s]:cut],
+                 rec.t[prev[s]:cut], rec.p[prev[s]:cut])
+            )
+            prev[s] = cut
+        out = fp.feed(chunks)
+        for s in range(s_count):
+            parts[s].append(out.sensor(s))
+    tail = fp.flush()
+    for s in range(s_count):
+        parts[s].append(tail.sensor(s))
+    return parts
+
+
+def test_fleet_single_feed_equals_scan_per_sensor():
+    recs = _fleet_recordings()
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=len(recs))
+    parts = _interleave(fp, recs, [[] for _ in recs])
+    for s, rec in enumerate(recs):
+        scan = run_recording_scan(rec, config)
+        _assert_stream_equals_scan(parts[s], scan)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.integers(0, 10_000_000), min_size=4, max_size=12))
+def test_fleet_random_interleaving_bit_identical(raw):
+    recs = _fleet_recordings()
+    config = PipelineConfig()
+    # Derive per-sensor cut lists and idle rounds from the random draw, so
+    # sensors close different window counts per feed (ragged padding) and
+    # some sensors skip rounds entirely.
+    cuts = [
+        sorted(c % (len(recs[s]) + 1) for j, c in enumerate(raw) if j % 4 == s)
+        for s in range(len(recs))
+    ]
+    idle = {(raw[0] % 3, raw[1] % len(recs)), (raw[-1] % 3, raw[-2] % len(recs))}
+    fp = FleetPipeline(config, n_sensors=len(recs))
+    parts = _interleave(fp, recs, cuts, idle=idle)
+    for s, rec in enumerate(recs):
+        scan = run_recording_scan(rec, config)
+        _assert_stream_equals_scan(parts[s], scan)
+
+
+def test_fleet_matches_independent_streams_feed_by_feed():
+    recs = _fleet_recordings()
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=len(recs))
+    sps = [StreamingPipeline(config) for _ in recs]
+    thirds = [[len(r) // 3, 2 * len(r) // 3] for r in recs]
+    prev = [0] * len(recs)
+    for i in range(3):
+        chunks = []
+        for s, rec in enumerate(recs):
+            cut = len(rec) if i == 2 else thirds[s][i]
+            chunks.append(
+                (rec.x[prev[s]:cut], rec.y[prev[s]:cut],
+                 rec.t[prev[s]:cut], rec.p[prev[s]:cut])
+            )
+            prev[s] = cut
+        out = fp.feed(chunks)
+        for s in range(len(recs)):
+            ref = sps[s].feed(*chunks[s])
+            got = out.sensor(s)
+            assert got.num_windows == ref.num_windows
+            for field in ref.clusters._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got.clusters, field)),
+                    np.asarray(getattr(ref.clusters, field)),
+                    err_msg=f"feed {i} sensor {s} clusters.{field}",
+                )
+            for field in ref.final_tracks._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got.final_tracks, field)),
+                    np.asarray(getattr(ref.final_tracks, field)),
+                    err_msg=f"feed {i} sensor {s} final_tracks.{field}",
+                )
+    fo, so = fp.flush(), [sp.flush() for sp in sps]
+    for s in range(len(recs)):
+        np.testing.assert_array_equal(
+            np.asarray(fo.sensor(s).clusters.count),
+            np.asarray(so[s].clusters.count),
+        )
+
+
+def test_fleet_sensor_mid_tag_rollover_keeps_identity():
+    recs = _fleet_recordings()
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=len(recs))
+    fp._tag_limit = 4  # force per-sensor atlas re-zeroing every few windows
+    cuts = [list(range(0, len(r), max(len(r) // 6, 1))) for r in recs]
+    parts = _interleave(fp, recs, cuts)
+    assert any(c.next_tag <= 4 for c in fp.state.cursors)
+    for s, rec in enumerate(recs):
+        scan = run_recording_scan(rec, config)
+        _assert_stream_equals_scan(parts[s], scan)
+
+
+def test_fleet_without_tracking():
+    recs = _fleet_recordings()[:2]
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2, with_tracking=False)
+    parts = _interleave(fp, recs, [[len(r) // 2] for r in recs])
+    for s, rec in enumerate(recs):
+        scan = run_recording_scan(rec, config, with_tracking=False)
+        assert all(p.tracks is None and p.final_tracks is None for p in parts[s])
+        _assert_stream_equals_scan(parts[s], scan, with_tracking=False)
+
+
+def test_fleet_feed_rejects_bad_chunk_atomically():
+    recs = _fleet_recordings()[:2]
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    r0, r1 = recs
+    bad_t = r1.t[:10][::-1].copy()  # unsorted within the chunk
+    with pytest.raises(ValueError, match="sensor 1"):
+        fp.feed([
+            (r0.x[:10], r0.y[:10], r0.t[:10], r0.p[:10]),
+            (r1.x[:10], r1.y[:10], bad_t, r1.p[:10]),
+        ])
+    # NO sensor absorbed anything — the whole feed was rejected.
+    assert all(c.pending_count == 0 for c in fp.state.cursors)
+    parts = _interleave(fp, recs, [[len(r) // 2] for r in recs])
+    for s, rec in enumerate(recs):
+        _assert_stream_equals_scan(parts[s], run_recording_scan(rec, config))
+
+
+def test_fleet_feed_rejects_regressing_feed_boundary():
+    recs = _fleet_recordings()[:2]
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    half = [len(r) // 2 for r in recs]
+    fp.feed([
+        (r.x[:h], r.y[:h], r.t[:h], r.p[:h]) for r, h in zip(recs, half)
+    ])
+    with pytest.raises(ValueError, match="monotonically non-decreasing"):
+        fp.feed([
+            (recs[0].x[:5], recs[0].y[:5], recs[0].t[:5], recs[0].p[:5]),
+            None,
+        ])
+
+
+def test_fleet_feed_wrong_chunk_count():
+    fp = FleetPipeline(PipelineConfig(), n_sensors=3)
+    with pytest.raises(ValueError, match="3 per-sensor chunks"):
+        fp.feed([None, None])
+
+
+def test_fleet_empty_feed_closes_nothing():
+    recs = _fleet_recordings()[:2]
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    out = fp.feed([None, None])
+    assert out.total_windows == 0
+    assert all(out.sensor(s).num_windows == 0 for s in range(2))
+    # Tiny chunks that cannot close a window stay pending per sensor.
+    out = fp.feed([
+        (r.x[:3], r.y[:3], r.t[:3], r.p[:3]) for r in recs
+    ])
+    assert out.total_windows == 0
+    assert [c.pending_count for c in fp.state.cursors] == [3, 3]
+
+
+def test_fleet_state_sensor_count_mismatch():
+    fp = FleetPipeline(PipelineConfig(), n_sensors=2)
+    with pytest.raises(ValueError, match="2 sensors"):
+        FleetPipeline(PipelineConfig(), n_sensors=3, state=fp.state)
+
+
+def test_fleet_sensor_sharded_carries(subproc):
+    """4 sensors over a 4-device 'sensor' mesh: carry leaves are sharded
+    over the sensor axis and outputs stay bit-identical to the unsharded
+    fleet."""
+    out = subproc(
+        """
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.pipeline import FleetPipeline, PipelineConfig
+from repro.data.synthetic import make_recording
+from repro.launch.mesh import make_mesh
+
+assert jax.device_count() == 4
+mesh = make_mesh((4,), ("sensor",))
+config = PipelineConfig()
+recs = [make_recording(seed=20 + s, duration_s=0.2, n_rsos=1) for s in range(4)]
+chunks = [(r.x, r.y, r.t, r.p) for r in recs]
+
+plain = FleetPipeline(config, n_sensors=4)
+sharded = FleetPipeline(config, n_sensors=4, mesh=mesh)
+spec = sharded.state.atlas.sharding.spec
+assert "sensor" in str(spec), spec
+
+a = plain.feed(chunks)
+b = sharded.feed(chunks)
+np.testing.assert_array_equal(
+    np.asarray(a.clusters.count), np.asarray(b.clusters.count)
+)
+for field in a.final_tracks._fields:
+    np.testing.assert_array_equal(
+        np.asarray(getattr(a.final_tracks, field)),
+        np.asarray(getattr(b.final_tracks, field)),
+        err_msg=field,
+    )
+ta, tb = plain.flush(), sharded.flush()
+np.testing.assert_array_equal(
+    np.asarray(ta.clusters.count), np.asarray(tb.clusters.count)
+)
+print("SHARDED-FLEET-OK")
+""",
+        device_count=4,
+    )
+    assert "SHARDED-FLEET-OK" in out

@@ -1,0 +1,204 @@
+"""Scenario simulator: every family produces labeled, evaluable
+recordings; family-specific statistics hold; the fleet evaluation path
+scores the scenario suite identically to the offline scan path."""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    PipelineConfig,
+    collect_candidates,
+    collect_candidates_fleet,
+    collect_candidates_many,
+    score_threshold,
+    threshold_sweep,
+    track_table,
+)
+from repro.data.synthetic import (
+    KIND_NOISE,
+    KIND_RSO,
+    KIND_STAR,
+    SCENARIO_FAMILIES,
+    RSOSpec,
+    Scenario,
+    make_fleet_recordings,
+    make_scenario,
+    make_scenario_suite,
+)
+
+DUR = 0.6  # seconds; short but > several tumble/jitter periods
+
+
+@functools.lru_cache(maxsize=None)
+def _family(fam: str, seed: int = 11):
+    import dataclasses
+
+    sc = dataclasses.replace(SCENARIO_FAMILIES[fam], duration_s=DUR)
+    return make_scenario(sc, seed=seed)
+
+
+def test_scenario_registry_is_diverse():
+    # >= 5 new families beyond the paper's linear-crossing regime.
+    assert len(SCENARIO_FAMILIES) >= 6
+    assert "crossing" in SCENARIO_FAMILIES  # the baseline regime stays
+
+
+@pytest.mark.parametrize("fam", sorted(SCENARIO_FAMILIES))
+def test_scenario_recording_is_labeled_and_sorted(fam):
+    rec = _family(fam)
+    assert len(rec) > 0
+    assert np.all(np.diff(rec.t) >= 0)
+    assert rec.kind.shape == rec.t.shape == rec.obj.shape
+    assert set(np.unique(rec.kind)) <= {KIND_NOISE, KIND_STAR, KIND_RSO}
+    # Per-event ground truth: every RSO event names a real track row.
+    rso_objs = rec.obj[rec.kind == KIND_RSO]
+    assert rso_objs.size > 0
+    assert rso_objs.min() >= 0
+    assert rso_objs.max() < track_table(rec.rso_tracks).shape[0]
+    # Noise carries no object id.
+    assert np.all(rec.obj[rec.kind == KIND_NOISE] == -1)
+    # RSO events sit within the gate of their ground-truth trajectory
+    # (PSF + pointing jitter + integer truncation stay below ~6 px).
+    for r in range(rec.rso_tracks.shape[0]):
+        sel = (rec.kind == KIND_RSO) & (rec.obj == r)
+        px, py = rec.rso_position(r, rec.t[sel])
+        d = np.hypot(px - rec.x[sel], py - rec.y[sel])
+        assert np.percentile(d, 95) < 8.0, fam
+
+
+@pytest.mark.parametrize("fam", sorted(SCENARIO_FAMILIES))
+def test_scenario_families_are_exercised_by_evaluation(fam):
+    """Every family flows through the full evaluation suite and produces
+    a meaningful confusion matrix (candidates on both sides)."""
+    rec = _family(fam)
+    score = score_threshold(collect_candidates(rec), 5)
+    total = score.tp + score.fp + score.fn + score.tn
+    assert total > 0
+    # Every family keeps some separability signal: true positives exist...
+    assert score.tp > 0, (fam, score)
+    # ...and so do correctly rejected star/noise candidates.
+    assert score.tn > 0, (fam, score)
+
+
+def test_detectable_families_keep_high_recall():
+    # Dense movers (linear, slow GEO, curved) must stay detectable at the
+    # paper's min_events=5; degraded-regime families (tumbling troughs,
+    # bursts) are allowed to dip but not vanish. hot_columns is the
+    # designed failure regime — stuck columns collapse the size-cut
+    # windows so the per-window hot-pixel filter stops firing and both
+    # recall and precision crater; the floor only pins that the true
+    # objects don't disappear entirely.
+    for fam, floor in [
+        ("crossing", 0.85), ("geo_slow", 0.85), ("ballistic", 0.85),
+        ("jitter", 0.85), ("tumbling", 0.6), ("noise_burst", 0.6),
+        ("hot_columns", 0.1),
+    ]:
+        score = score_threshold(collect_candidates(_family(fam)), 5)
+        assert score.recall >= floor, (fam, score)
+    # The stress is real: hot columns destroy precision.
+    hot = score_threshold(collect_candidates(_family("hot_columns")), 5)
+    assert hot.precision < 0.5
+
+
+def test_ballistic_tracks_are_quadratic():
+    rec = _family("ballistic")
+    tracks = track_table(rec.rso_tracks)
+    assert tracks.shape[-1] == 6
+    assert np.any(np.hypot(tracks[:, 4], tracks[:, 5]) > 1.0)
+    # rso_position honors the acceleration columns.
+    x0, y0, vx, vy, ax, ay = tracks[0]
+    t_us = np.array([0.0, 5e5, 1e6])
+    px, py = rec.rso_position(0, t_us)
+    ts = t_us * 1e-6
+    np.testing.assert_allclose(px, x0 + vx * ts + 0.5 * ax * ts * ts)
+    np.testing.assert_allclose(py, y0 + vy * ts + 0.5 * ay * ts * ts)
+
+
+def test_tumbling_modulates_event_rate():
+    rec_t = _family("tumbling")
+    rec_c = _family("crossing")
+
+    def cv(rec):  # per-50ms-bin coefficient of variation of RSO arrivals
+        t = rec.t[(rec.kind == KIND_RSO) & (rec.obj == 0)]
+        bins = np.histogram(t, bins=np.arange(0, rec.duration_us, 50_000))[0]
+        return bins.std() / max(bins.mean(), 1e-9)
+
+    # Sinusoidal thinning makes arrivals much burstier than Poisson.
+    assert cv(rec_t) > 2.0 * cv(rec_c)
+
+
+def test_hot_columns_concentrate_on_few_pixels():
+    rec = _family("hot_columns")
+    noise = rec.kind == KIND_NOISE
+    cols, counts = np.unique(rec.x[noise], return_counts=True)
+    top3 = counts[np.argsort(counts)][-3:].sum()
+    # The three stuck columns dominate the background events.
+    assert top3 > 0.5 * noise.sum()
+
+
+def test_noise_burst_is_temporally_localized():
+    rec = _family("noise_burst")
+    t = rec.t[rec.kind == KIND_NOISE]
+    bins = np.histogram(t, bins=np.arange(0, rec.duration_us, 10_000))[0]
+    assert bins.max() > 5 * np.median(bins)
+
+
+def test_pointing_jitter_moves_the_frame():
+    import dataclasses
+
+    sc = dataclasses.replace(SCENARIO_FAMILIES["jitter"], duration_s=DUR)
+    still = dataclasses.replace(sc, jitter_px=0.0)
+    a = make_scenario(sc, seed=5)
+    b = make_scenario(still, seed=5)
+    # Same seed, same events drawn — only the apparent positions wobble.
+    assert len(a) == len(b)
+    np.testing.assert_array_equal(a.t, b.t)
+    moved = np.abs(a.x - b.x) + np.abs(a.y - b.y)
+    assert (moved > 0).mean() > 0.5
+
+
+def test_scenario_suite_and_sweep_run_end_to_end():
+    suite = make_scenario_suite(duration_s=0.35)
+    assert len(suite) == len(SCENARIO_FAMILIES)
+    sweep = threshold_sweep(suite, thresholds=(2, 5, 8))
+    assert set(sweep) == {2, 5, 8}
+    assert all(s.tp + s.fp + s.fn + s.tn > 0 for s in sweep.values())
+
+
+def test_fleet_evaluation_equals_scan_on_scenarios():
+    suite = make_scenario_suite(
+        families=("crossing", "ballistic", "tumbling", "geo_slow"),
+        duration_s=0.35,
+    )
+    for a, b in zip(
+        collect_candidates_many(suite), collect_candidates_fleet(suite)
+    ):
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_array_equal(a.is_rso, b.is_rso)
+        np.testing.assert_array_equal(a.object_best, b.object_best)
+    sweep_scan = threshold_sweep(suite, thresholds=(5,), driver="scan")
+    sweep_fleet = threshold_sweep(suite, thresholds=(5,), driver="fleet")
+    assert sweep_scan[5] == sweep_fleet[5]
+
+
+def test_fleet_recordings_are_scenario_diverse():
+    recs = make_fleet_recordings(4, seed0=3, duration_s=0.25)
+    assert len(recs) == 4
+    assert len({r.name.split("-", 1)[1] for r in recs}) == 4  # distinct families
+    for r in recs:
+        assert np.all(np.diff(r.t) >= 0)
+
+
+def test_composed_scenario():
+    # Stressors compose in one sky: tumbling + hot columns + jitter.
+    sc = Scenario(
+        name="kitchen-sink",
+        rsos=(RSOSpec(tumble_hz=4.0),),
+        hot_columns=1,
+        jitter_px=1.5,
+        duration_s=0.3,
+    )
+    rec = make_scenario(sc, seed=2)
+    score = score_threshold(collect_candidates(rec), 5)
+    assert score.tp + score.fn > 0

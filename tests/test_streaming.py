@@ -230,6 +230,49 @@ def test_stream_state_resumes_in_new_pipeline():
 
 
 # ---------------------------------------------------------------------------
+# Feed monotonicity validation (no silent mis-windowing).
+# ---------------------------------------------------------------------------
+
+def test_feed_rejects_unsorted_chunk():
+    rec = _recording()
+    sp = StreamingPipeline(PipelineConfig())
+    t_bad = rec.t[:20][::-1].copy()
+    with pytest.raises(ValueError, match="not non-decreasing"):
+        sp.feed(rec.x[:20], rec.y[:20], t_bad, rec.p[:20])
+    # The chunk was not absorbed; the stream stays usable.
+    assert sp.state.pending_count == 0
+    parts = _feed_chunks(sp, rec, [len(rec) // 2])
+    _assert_stream_equals_scan(parts, run_recording_scan(rec, PipelineConfig()))
+
+
+def test_feed_rejects_timestamps_regressing_across_feeds():
+    rec = _recording()
+    sp = StreamingPipeline(PipelineConfig())
+    half = len(rec) // 2
+    sp.feed(rec.x[:half], rec.y[:half], rec.t[:half], rec.p[:half])
+    # Re-feeding earlier events would mis-window silently without the check:
+    # the already-processed prefix cannot be re-windowed.
+    with pytest.raises(ValueError, match="monotonically non-decreasing"):
+        sp.feed(rec.x[:10], rec.y[:10], rec.t[:10], rec.p[:10])
+    # Regression applies even when the remainder is empty but earlier
+    # feeds consumed later timestamps.
+    rest = sp.feed(rec.x[half:], rec.y[half:], rec.t[half:], rec.p[half:])
+    assert rest.num_windows > 0
+    with pytest.raises(ValueError, match="monotonically non-decreasing"):
+        sp.feed(rec.x[:1], rec.y[:1], rec.t[:1], rec.p[:1])
+
+
+def test_feed_accepts_equal_boundary_timestamps():
+    # Non-decreasing means ties are legal, both within and across feeds.
+    t = np.array([0, 0, 5, 5], np.int64)
+    z = np.zeros(4, np.int32)
+    sp = StreamingPipeline(PipelineConfig())
+    sp.feed(z, z, t, z)
+    sp.feed(z, z, np.full(4, 5, np.int64), z)  # t[0] == last absorbed t
+    assert sp.state.pending_count == 8
+
+
+# ---------------------------------------------------------------------------
 # Tracker chaining across segment boundaries (track_recording init=...).
 # ---------------------------------------------------------------------------
 
