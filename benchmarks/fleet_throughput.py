@@ -67,8 +67,8 @@ import jax
 import numpy as np
 from _common import git_commit
 
-from repro.core.events import stride_bounds
 from repro.core.pipeline import FleetPipeline, PipelineConfig, StreamingPipeline
+from repro.data.evas import iter_chunks
 from repro.data.synthetic import SCENARIO_FAMILIES, make_fleet_recordings
 
 N_SENSORS = int(os.environ.get("N_SENSORS", "8"))
@@ -99,11 +99,7 @@ def _recordings():
 def _rounds(recs):
     """Per-round chunk tuples: ``rounds[i][s]`` is sensor s's i-th slice
     (or None once that sensor's stream is exhausted)."""
-    per_sensor = [
-        [(r.x[lo:hi], r.y[lo:hi], r.t[lo:hi], r.p[lo:hi])
-         for lo, hi, _ in stride_bounds(r.t, CHUNK_US)]
-        for r in recs
-    ]
+    per_sensor = [list(iter_chunks(r, CHUNK_US)) for r in recs]
     n_rounds = max(len(c) for c in per_sensor)
     return [
         [c[i] if i < len(c) else None for c in per_sensor]

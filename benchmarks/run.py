@@ -18,7 +18,7 @@ Two kinds of entries share this single entrypoint:
 Select subsets by key::
 
   PYTHONPATH=src python -m benchmarks.run table1 fig10   # paper tables
-  PYTHONPATH=src python -m benchmarks.run scan stream fleet
+  PYTHONPATH=src python -m benchmarks.run scan stream fleet serve
   PYTHONPATH=src python -m benchmarks.run                # everything
 """
 from __future__ import annotations
@@ -49,6 +49,7 @@ BENCHES = {
     "scan": ("scan_throughput.py", "BENCH_scan.json"),
     "stream": ("stream_latency.py", "BENCH_stream.json"),
     "fleet": ("fleet_throughput.py", "BENCH_fleet.json"),
+    "serve": ("serve_latency.py", "BENCH_serve.json"),
 }
 
 

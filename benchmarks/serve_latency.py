@@ -1,0 +1,255 @@
+"""Detection-service feed latency under session churn.
+
+The service layer's pitch is dynamic membership at serving speed:
+sensors attach, stream, and detach against ONE slot-pooled fleet step,
+with micro-batched admission — so the paper's 62 ms deterministic-latency
+budget has to hold *while the session set is changing*, not just for a
+frozen fleet. This benchmark replays a churning ground-station scenario:
+
+* a scenario-diverse session pool (rate-balanced families, per-sensor
+  pointing jitter) feeding 20 ms live-cadence chunks via
+  ``iter_chunks`` — the same wire shape a live EBC client sends;
+* churn: the pool starts at CHURN_START sessions, grows one session
+  every ATTACH_EVERY rounds up to N_SESSIONS (crossing a capacity-tier
+  promotion on the way), and from then on cycles detach-oldest +
+  attach-replacement every CHURN_EVERY rounds — so slot zeroing,
+  recycling, and carry migration all sit on the measured path;
+* per-round latency = wall time of (every live session's ``feed`` +
+  one forced ``pump`` + blocking on the round's results): the full
+  service cost of a fleet-wide feed round, which is also each session's
+  per-feed service latency since every queued chunk is served in that
+  round's single step.
+
+Methodology matches the fleet bench: one cold pass warms every compiled
+shape (at most one fleet-step compile per capacity tier — reported from
+the step-trace hook), then N_PASSES steady-state passes with GC off,
+combined by per-round minimum (the least-noise estimator documented in
+benchmarks/fleet_throughput.py).
+
+Gates (exit code 1 on failure, BENCH_NO_FAIL=1 to disable):
+
+* steady-state per-feed p99 <= BUDGET_MS (62 ms paper budget), churn on.
+
+Results land in BENCH_serve.json at the repo root with the uniform
+``bench`` block the ``benchmarks.run`` aggregator consumes.
+
+  PYTHONPATH=src python benchmarks/serve_latency.py
+  N_SESSIONS=8 DURATION_S=2 CHUNK_US=20000 BUDGET_MS=62 ...  (CI knobs)
+"""
+import dataclasses
+import gc
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax
+import numpy as np
+from _common import git_commit
+
+from repro.core.pipeline import PipelineConfig
+from repro.core.pipeline import fleet as fleet_mod
+from repro.data.evas import iter_chunks
+from repro.data.synthetic import SCENARIO_FAMILIES, make_fleet_recordings
+from repro.serve import AdmissionConfig, DetectionService
+
+N_SESSIONS = int(os.environ.get("N_SESSIONS", "8"))
+DURATION_S = float(os.environ.get("DURATION_S", "2.0"))
+CHUNK_US = int(os.environ.get("CHUNK_US", "20000"))
+BUDGET_MS = float(os.environ.get("BUDGET_MS", "62"))
+N_PASSES = int(os.environ.get("N_PASSES", "5"))
+# Default rounds stay under DURATION_S / CHUNK_US so no session exhausts
+# its replay mid-schedule (exhausted sessions idle until churned out).
+N_ROUNDS = int(os.environ.get("N_ROUNDS", "96"))
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+TIERS = (4, 8, 16, 32)
+CHURN_START = min(4, N_SESSIONS)
+ATTACH_EVERY = 8  # rounds between ramp-up attaches
+CHURN_EVERY = 12  # rounds between detach+replace cycles at full strength
+
+BALANCED_FAMILIES = ("crossing", "geo_slow", "tumbling", "ballistic", "jitter")
+
+
+def _recording(idx: int):
+    fam = BALANCED_FAMILIES[idx % len(BALANCED_FAMILIES)]
+    rec = make_fleet_recordings(
+        1, scenario=SCENARIO_FAMILIES[fam],
+        seed0=101 * idx, duration_s=DURATION_S,
+    )[0]
+    return dataclasses.replace(rec, name=f"station{idx}-{fam}")
+
+
+def _replay(recordings):
+    """One full churn schedule; returns (per-round ms, stats dict)."""
+    # The paper's 250-event size cut is per sensor; fleet-wide admission
+    # weight scales with the session count, otherwise the size threshold
+    # fires several times inside every 20 ms round and the micro-batch
+    # degenerates to per-sensor steps.
+    svc = DetectionService(
+        PipelineConfig(), tiers=TIERS,
+        admission=AdmissionConfig(
+            max_delay_s=CHUNK_US / 1e6, max_items=250 * N_SESSIONS
+        ),
+    )
+    next_rec = iter(recordings)
+    live: dict[int, object] = {}  # sid -> chunk iterator
+    order: list[int] = []  # attach order (detach the oldest)
+    events = windows = dets = attaches = detaches = 0
+
+    def attach():
+        nonlocal attaches
+        rec = next(next_rec)
+        sid = svc.attach(rec.name)
+        live[sid] = iter_chunks(rec, CHUNK_US)
+        order.append(sid)
+        attaches += 1
+
+    def consume(served):
+        nonlocal windows, dets
+        for fd in served:
+            windows += fd.result.num_windows
+            if fd.result.num_windows:
+                dets += int(np.asarray(fd.result.clusters.valid).sum())
+
+    for _ in range(CHURN_START):
+        attach()
+    times = []
+    for rnd in range(N_ROUNDS):
+        # Churn runs INSIDE the timed window: the detach flush step, slot
+        # zeroing, and tier promotion are service work the latency gate
+        # must cover, not background it.
+        t0 = time.perf_counter()
+        if len(live) < N_SESSIONS and rnd % ATTACH_EVERY == ATTACH_EVERY - 1:
+            attach()
+        elif len(live) == N_SESSIONS and rnd % CHURN_EVERY == CHURN_EVERY - 1:
+            oldest = order.pop(0)
+            del live[oldest]
+            windows += svc.detach(oldest).num_windows
+            detaches += 1
+            attach()
+        results = []
+        for sid, chunks in live.items():
+            chunk = next(chunks, None)
+            if chunk is None:
+                continue  # stream exhausted: idles until churned out
+            events += len(chunk[2])
+            results.extend(svc.feed(sid, *chunk))
+        results.extend(svc.pump(force=True))
+        jax.block_until_ready([fd.result.metrics for fd in results])
+        times.append((time.perf_counter() - t0) * 1e3)
+        consume(results)
+    for sid in list(live):
+        windows += svc.detach(sid).num_windows
+    return times, {
+        "events": events, "windows": windows, "detections": dets,
+        "attaches": attaches, "detaches": detaches + len(order),
+        "promotions": svc.promotions,
+    }
+
+
+def main() -> None:
+    # Enough distinct recordings for the whole churn schedule, per pass.
+    n_recs = CHURN_START + N_SESSIONS + N_ROUNDS // CHURN_EVERY + 2
+    recordings = [_recording(i) for i in range(n_recs)]
+    print(
+        f"backend={jax.default_backend()}  sessions<= {N_SESSIONS}  "
+        f"tiers={TIERS[:2]}...  rounds={N_ROUNDS} x {CHUNK_US / 1e3:.0f} ms  "
+        f"budget={BUDGET_MS} ms"
+    )
+
+    # Cold pass: compiles every step shape (at most one per capacity tier).
+    fleet_mod.STEP_TRACES.clear()
+    t0 = time.perf_counter()
+    _, stats = _replay(recordings)
+    cold_s = time.perf_counter() - t0
+    compiles = sorted({(s, w) for (s, w, _, _) in fleet_mod.STEP_TRACES})
+    tiers_hit = sorted({s for s, _ in compiles})
+
+    gc.collect()
+    gc.disable()
+    try:
+        passes = [_replay(recordings)[0] for _ in range(N_PASSES)]
+    finally:
+        gc.enable()
+    arr = np.minimum.reduce([np.asarray(p) for p in passes])
+    p50, p95, p99 = (float(np.percentile(arr, q)) for q in (50, 95, 99))
+    peak = float(arr.max())
+
+    print(
+        f"churn per pass: {stats['attaches']} attaches, "
+        f"{stats['detaches']} detaches, {stats['promotions']} tier "
+        f"promotions; {stats['events']:,} events, {stats['windows']} windows"
+    )
+    print(f"cold pass (incl. compiles): {cold_s:.2f} s")
+    print(
+        f"fleet-step compiles: {len(compiles)} shapes {compiles} over "
+        f"capacity tiers {tiers_hit} (compile budget: <= 1 per tier per "
+        f"window count)"
+    )
+    print(
+        f"steady-state per-feed service latency (churn on): "
+        f"p50={p50:.2f} ms  p95={p95:.2f} ms  p99={p99:.2f} ms  "
+        f"max={peak:.2f} ms"
+    )
+    gate_p99 = p99 <= BUDGET_MS
+    print(
+        f"p99 vs paper budget: {p99:.2f} ms <= {BUDGET_MS} ms "
+        f"({'PASS' if gate_p99 else 'FAIL'})"
+    )
+
+    payload = {
+        "backend": jax.default_backend(),
+        "commit": git_commit(),
+        "n_sessions": N_SESSIONS,
+        "tiers": list(TIERS),
+        "duration_s": DURATION_S,
+        "chunk_us": CHUNK_US,
+        "n_rounds": N_ROUNDS,
+        "budget_ms": BUDGET_MS,
+        "cold_pass_s": round(cold_s, 3),
+        "churn": {
+            "attaches": stats["attaches"],
+            "detaches": stats["detaches"],
+            "tier_promotions": stats["promotions"],
+        },
+        "fleet_step_compiles": [list(c) for c in compiles],
+        "n_events_per_pass": stats["events"],
+        "n_windows_per_pass": stats["windows"],
+        "latency_ms": {
+            "p50": round(p50, 3),
+            "p95": round(p95, 3),
+            "p99": round(p99, 3),
+            "max": round(peak, 3),
+        },
+        "n_passes": N_PASSES,
+        "bench": {
+            "name": "serve_latency",
+            "p50_ms": round(p50, 3),
+            "p99_ms": round(p99, 3),
+            "gates": [
+                {
+                    "name": "feed_p99_within_budget_with_churn",
+                    "value": round(p99, 3),
+                    "threshold": BUDGET_MS,
+                    "op": "<=",
+                    "pass": gate_p99,
+                },
+            ],
+        },
+    }
+    out_path = REPO_ROOT / "BENCH_serve.json"
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out_path}")
+
+    if os.environ.get("BENCH_NO_FAIL"):
+        return
+    if not gate_p99:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

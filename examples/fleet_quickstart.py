@@ -17,9 +17,9 @@ import time
 
 import numpy as np
 
-from repro.core.events import stride_bounds
 from repro.core.pipeline import FleetPipeline, PipelineConfig
 from repro.core.tracking import confirmed
+from repro.data.evas import iter_chunks
 from repro.data.synthetic import SCENARIO_FAMILIES, make_fleet_recordings
 
 CHUNK_US = 20_000  # feed 20 ms per sensor per round
@@ -41,11 +41,7 @@ def main() -> None:
         print(f"  {rec.name:<22} {len(rec):>7,} events")
 
     # Slice every sensor's stream into 20 ms rounds (None = exhausted).
-    per_sensor = [
-        [(r.x[lo:hi], r.y[lo:hi], r.t[lo:hi], r.p[lo:hi])
-         for lo, hi, _ in stride_bounds(r.t, CHUNK_US)]
-        for r in recs
-    ]
+    per_sensor = [list(iter_chunks(r, CHUNK_US)) for r in recs]
     n_rounds = max(len(c) for c in per_sensor)
 
     cfg = PipelineConfig()  # paper defaults: 16px cells, min_events=5

@@ -235,6 +235,37 @@ class BatcherConfig:
     capacity: int = DEFAULT_CAPACITY
 
 
+def validate_monotone(
+    t: np.ndarray, last_t: int | None = None, label: str = "feed"
+) -> None:
+    """Reject a chunk whose timestamps would mis-window the stream.
+
+    Timestamps must be non-decreasing *within* the chunk and must not
+    precede ``last_t``, the newest timestamp the stream has already
+    absorbed (which may belong to an already-processed window, not just
+    the remainder). Raises ``ValueError`` on violation; shared by
+    :func:`monotone_merge` (the fleet/stream merge point) and the
+    session layer (:mod:`repro.serve.sessions`), which validates at
+    accept time so a bad chunk is refused before it is ever queued.
+    """
+    t = np.asarray(t, np.int64)
+    if not len(t):
+        return
+    if len(t) > 1 and np.any(t[1:] < t[:-1]):
+        bad = int(np.argmax(t[1:] < t[:-1]))
+        raise ValueError(
+            f"{label}: chunk timestamps are not non-decreasing "
+            f"(t[{bad + 1}]={int(t[bad + 1])} < t[{bad}]={int(t[bad])}); "
+            "events must be time-sorted"
+        )
+    if last_t is not None and int(t[0]) < last_t:
+        raise ValueError(
+            f"{label}: chunk starts at t={int(t[0])} us, before the "
+            f"stream's newest absorbed timestamp {last_t} us; feeds "
+            "must be monotonically non-decreasing across boundaries"
+        )
+
+
 def monotone_merge(
     pending: tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray],
     x: np.ndarray,
@@ -250,29 +281,13 @@ def monotone_merge(
     out-of-order chunk would silently land events in the wrong window
     (the window boundaries are computed from ``searchsorted`` over the
     merged buffer). This is the one merge point every streaming driver
-    goes through, so the contract is enforced here: timestamps must be
-    non-decreasing *within* the chunk and must not precede ``last_t``,
-    the newest timestamp already absorbed by the stream (which may
-    belong to an already-processed window, not just the remainder).
-    Raises ``ValueError`` before any state is touched — the caller's
-    carry stays valid and the offending chunk is not absorbed.
+    goes through, so :func:`validate_monotone` is enforced here: a bad
+    chunk raises ``ValueError`` before any state is touched — the
+    caller's carry stays valid and the chunk is not absorbed.
     """
     px, py, pt, pp = pending
     t = np.asarray(t, np.int64)
-    if len(t):
-        if len(t) > 1 and np.any(t[1:] < t[:-1]):
-            bad = int(np.argmax(t[1:] < t[:-1]))
-            raise ValueError(
-                f"{label}: chunk timestamps are not non-decreasing "
-                f"(t[{bad + 1}]={int(t[bad + 1])} < t[{bad}]={int(t[bad])}); "
-                "events must be time-sorted"
-            )
-        if last_t is not None and int(t[0]) < last_t:
-            raise ValueError(
-                f"{label}: chunk starts at t={int(t[0])} us, before the "
-                f"stream's newest absorbed timestamp {last_t} us; feeds "
-                "must be monotonically non-decreasing across boundaries"
-            )
+    validate_monotone(t, last_t, label)
     return (
         np.concatenate([px, np.asarray(x, np.int64)]),
         np.concatenate([py, np.asarray(y, np.int64)]),

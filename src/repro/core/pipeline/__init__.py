@@ -59,11 +59,13 @@ from repro.core.pipeline.stream import (  # noqa: F401
     tag_limit,
 )
 from repro.core.pipeline.fleet import (  # noqa: F401
+    DEFAULT_TIERS,
     FleetPipeline,
     FleetResult,
     FleetState,
     SensorCursor,
     make_fleet_fn,
+    tier_capacity,
 )
 from repro.core.pipeline.evaluate import (  # noqa: F401
     Candidates,

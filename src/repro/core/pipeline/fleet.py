@@ -36,6 +36,21 @@ Design invariants:
   ``NamedSharding`` and runs the step under the mesh so each device
   serves ``S / axis_size`` sensors with no cross-device collective. The
   stacked atlas is donated, like the single-sensor stream's.
+* **Slot pool.** The batched carry is a pool of recyclable slots, not a
+  frozen sensor roster: ``n_sensors`` is the pool *capacity*, an
+  unoccupied slot is simply one that is always fed ``None`` (all-zero
+  carry, rides along as all-invalid padding at negligible vmap cost),
+  :meth:`FleetPipeline.reset_slots` zeroes a slot's carries so a
+  departing sensor's slot can be handed to a new one (an all-zero slot
+  carry IS the fresh-stream initial state, so a recycled slot is
+  bit-identical to a brand-new :class:`StreamingPipeline`), and
+  :meth:`FleetPipeline.grow` migrates the carry into a larger pool
+  (zero-padded along the sensor dim, re-sharded). Because the step's
+  compiled shape depends only on the pool capacity — never on which
+  slots are occupied — attach/detach churn compiles nothing; only a
+  capacity-tier promotion (:func:`tier_capacity`) does, at most once
+  per tier. The session/service layer on top lives in
+  :mod:`repro.serve` (DESIGN.md Sec. 11).
 """
 from __future__ import annotations
 
@@ -60,10 +75,39 @@ from repro.core.pipeline.config import PipelineConfig
 from repro.core.pipeline.scan import ScanResult, _make_core, atlas_shape
 from repro.core.pipeline.stream import empty_scan_result, tag_limit
 from repro.core.tracking import TrackState, init_tracks
-from repro.distributed.sharding import hint_fleet, shard_fleet_carry
+from repro.distributed.sharding import (
+    grow_fleet_carry,
+    hint_fleet,
+    shard_fleet_carry,
+)
 
 _EMPTY = np.zeros(0, np.int64)
 _EMPTY_CHUNK = (_EMPTY, _EMPTY, _EMPTY, _EMPTY)
+
+# Slot-pool capacity tiers: a pool never grows by one — it is promoted to
+# the next tier, so attach/detach churn triggers at most one fleet-step
+# compile per tier instead of one per sensor-count (compile discipline is
+# pinned by tests/test_serve_service.py). Past the last tier, capacity
+# doubles.
+DEFAULT_TIERS = (4, 8, 16, 32, 64)
+
+# Test hook: one entry per fleet-step *trace* (== XLA compile), recording
+# (S, W, capacity, uniform). Compiled-cache hits never run the traced
+# Python, so appending inside the step body counts compiles exactly.
+STEP_TRACES: list[tuple[int, int, int, bool]] = []
+
+
+def tier_capacity(n: int, tiers: tuple[int, ...] = DEFAULT_TIERS) -> int:
+    """Smallest tier capacity holding ``n`` slots (doubling past the end)."""
+    if n < 1:
+        raise ValueError(f"need at least one slot, got {n}")
+    for cap in tiers:
+        if n <= cap:
+            return cap
+    cap = tiers[-1]
+    while cap < n:
+        cap *= 2
+    return cap
 
 
 @dataclasses.dataclass
@@ -130,6 +174,9 @@ def make_fleet_fn(config: PipelineConfig = PipelineConfig(), with_tracking: bool
     vcore = jax.vmap(core)
 
     def step(packed, valid, state, atlas, meta, uniform):
+        STEP_TRACES.append(
+            (packed.shape[1], packed.shape[2], packed.shape[3], uniform)
+        )
         stacked = EventBatch(packed[0], packed[1], packed[2], packed[3], valid)
         tag0, n_valid = meta[0], meta[1]
         atlas = hint_fleet(atlas)
@@ -163,6 +210,26 @@ def _zero_sensors_fn():
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _zero_slots_fn():
+    """Jit'd whole-slot zeroing (atlas slice + tracker slice) for slot
+    recycling. The atlas is donated like the step's; the tracker carry is
+    not — the previous feed handed those buffers to the caller as
+    ``final_tracks`` and zeroing in place would corrupt that result."""
+
+    def zero(atlas, tracks, reset):
+        atlas = jnp.where(reset[:, None, None], 0, atlas)
+        tracks = jax.tree.map(
+            lambda a: jnp.where(
+                reset.reshape((-1,) + (1,) * (a.ndim - 1)), jnp.zeros_like(a), a
+            ),
+            tracks,
+        )
+        return atlas, tracks
+
+    return jax.jit(zero, donate_argnums=(0,))
+
+
 @dataclasses.dataclass
 class FleetResult:
     """Stacked outputs of one fleet feed; per-sensor views on demand.
@@ -183,6 +250,7 @@ class FleetResult:
     _config: PipelineConfig
     _with_tracking: bool
     _carry_tracks: TrackState  # (S, T) carry after this feed (empty-feed path)
+    _host: tuple | None = None  # numpy copy of the stacked leaves, on demand
 
     @property
     def n_sensors(self) -> int:
@@ -192,24 +260,46 @@ class FleetResult:
     def total_windows(self) -> int:
         return int(self.n_windows.sum())
 
+    def _host_view(self) -> tuple:
+        """Stacked outputs pulled to host, once per feed.
+
+        Materializing S per-sensor results by slicing device arrays costs
+        S x leaves tiny dispatches — measured ~5x the whole vmapped step
+        on an 8-slot CPU fleet. One ``np.asarray`` per stacked leaf (a
+        single transfer each, amortized over every sensor) makes each
+        ``sensor(s)`` call pure numpy views. Values are the same bits, so
+        the bit-identity contract is untouched; the device-resident
+        stacked attributes stay as they were for O(1)-dispatch consumers.
+        """
+        if self._host is None:
+            self._host = jax.tree.map(
+                np.asarray,
+                (self.clusters, self.metrics, self.tracks, self.final_tracks),
+            )
+        return self._host
+
     def sensor(self, s: int) -> ScanResult:
         """Trimmed per-sensor result, bit-identical to the equivalent
         ``StreamingPipeline.feed`` return."""
         n = int(self.n_windows[s])
         w = self.windows[s]
-        carry_s = jax.tree.map(lambda a: a[s], self._carry_tracks)
         if self.clusters is None:
+            carry_s = jax.tree.map(lambda a: a[s], self._carry_tracks)
             return empty_scan_result(self._config, self._with_tracking, carry_s, w)
+        clusters_h, mets_h, tracks_h, final_h = self._host_view()
         trim = lambda a: a[s, :n]
-        clusters = jax.tree.map(trim, self.clusters)
-        mets = {k: trim(v) for k, v in self.metrics.items()}
-        final_s = jax.tree.map(lambda a: a[s], self.final_tracks)
+        clusters = jax.tree.map(trim, clusters_h)
+        mets = {k: trim(v) for k, v in mets_h.items()}
         return ScanResult(
             t_start_us=w.t_start_us,
             clusters=clusters,
             metrics=mets,
-            tracks=jax.tree.map(trim, self.tracks) if self._with_tracking else None,
-            final_tracks=final_s if self._with_tracking else None,
+            tracks=jax.tree.map(trim, tracks_h) if self._with_tracking else None,
+            final_tracks=(
+                jax.tree.map(lambda a: a[s], final_h)
+                if self._with_tracking
+                else None
+            ),
             windows=w,
         )
 
@@ -234,6 +324,17 @@ class FleetPipeline:
     before ANY sensor's state changes, as does a feed closing more
     windows than one tag epoch can address; the fleet stays usable and
     the same chunks can be re-fed.
+
+    As a slot pool (see module docstring): ``n_sensors`` is the pool
+    capacity, :meth:`reset_slots` zeroes departing slots for reuse,
+    :meth:`grow` promotes the pool to a larger capacity with carry
+    migration, and ``feed``'s ``final`` argument accepts a per-slot
+    mask so one sensor's trailing window can be force-closed (sensor
+    detach) without flushing the rest of the fleet.
+    ``uniform_fast_path=False`` disables the static all-sensors-uniform
+    step variant — dynamic-membership callers (the detection service)
+    use it to pin compiles to exactly one step shape per (capacity,
+    window-count) instead of two.
     """
 
     def __init__(
@@ -243,6 +344,7 @@ class FleetPipeline:
         with_tracking: bool = True,
         mesh=None,
         state: FleetState | None = None,
+        uniform_fast_path: bool = True,
     ):
         if n_sensors < 1:
             raise ValueError(f"n_sensors must be >= 1, got {n_sensors}")
@@ -250,6 +352,7 @@ class FleetPipeline:
         self.n_sensors = n_sensors
         self.with_tracking = with_tracking
         self.mesh = mesh
+        self.uniform_fast_path = uniform_fast_path
         self._step = make_fleet_fn(config, with_tracking)
         self._tag_limit = tag_limit(config)
         self.state = self.init_state() if state is None else state
@@ -279,22 +382,94 @@ class FleetPipeline:
 
         return use_mesh(self.mesh)
 
-    def feed(self, chunks) -> FleetResult:
+    def feed(self, chunks, final=False) -> FleetResult:
         """Ingest one chunk per sensor; process every closed window in one
-        vmapped step. ``chunks[s]`` is ``(x, y, t, p)`` or ``None``."""
-        return self._ingest(chunks, final=False)
+        vmapped step. ``chunks[s]`` is ``(x, y, t, p)`` or ``None``.
+
+        ``final`` may be a bool (flush every sensor's trailing partial
+        window, as :meth:`flush` does) or a per-sensor boolean mask —
+        masked slots are force-closed this feed (sensor detach) while
+        the rest keep batching normally.
+        """
+        return self._ingest(chunks, final=final)
 
     def flush(self) -> FleetResult:
         """Force-close every sensor's trailing partial window."""
         return self._ingest([None] * self.n_sensors, final=True)
 
-    def _ingest(self, chunks, final: bool) -> FleetResult:
+    def flush_slots(self, slots) -> FleetResult:
+        """Force-close the trailing partial window of ``slots`` only."""
+        final = np.zeros(self.n_sensors, bool)
+        final[list(slots)] = True
+        return self._ingest([None] * self.n_sensors, final=final)
+
+    def reset_slots(self, slots) -> None:
+        """Zero the named slots' carries (cursor + atlas slice + tracker
+        slice) so they can be recycled by new sensors.
+
+        An all-zero slot carry is exactly the fresh-stream initial state
+        (``init_tracks`` is all zeros; a zero atlas is all-stale), so a
+        recycled slot behaves bit-identically to a brand-new
+        :class:`~repro.core.pipeline.stream.StreamingPipeline`. Any
+        unflushed remainder on the slot is dropped — flush first
+        (:meth:`flush_slots`) if the trailing window matters.
+        """
+        slots = list(slots)
+        if not slots:
+            return
+        mask = np.zeros(self.n_sensors, bool)
+        mask[slots] = True  # IndexError on out-of-range slots, pre-mutation
+        st = self.state
+        for s in np.flatnonzero(mask):
+            st.cursors[s] = SensorCursor(pending=_EMPTY_CHUNK)
+        with self._mesh_ctx():
+            atlas, tracks = _zero_slots_fn()(st.atlas, st.tracks, jnp.asarray(mask))
+        self.state = FleetState(cursors=st.cursors, atlas=atlas, tracks=tracks)
+
+    def grow(self, new_capacity: int) -> None:
+        """Promote the pool to ``new_capacity`` slots, migrating the carry.
+
+        Existing slots keep their state verbatim (zero-padding along the
+        leading sensor dim cannot perturb them — the step is vmapped, so
+        sensors never mix); new slots arrive zeroed, i.e. free. The
+        carry is re-placed under the mesh so slot-pool carries keep
+        sharding over the ``sensor`` axis after promotion. Compiles
+        nothing by itself; the next feed compiles the step at the new
+        capacity (once per capacity, the tier-promotion budget).
+        """
+        if new_capacity < self.n_sensors:
+            raise ValueError(
+                f"cannot shrink pool from {self.n_sensors} to {new_capacity} "
+                "slots; detach sensors instead"
+            )
+        if new_capacity == self.n_sensors:
+            return
+        st = self.state
+        atlas, tracks = grow_fleet_carry(
+            (st.atlas, st.tracks), new_capacity, self.mesh
+        )
+        cursors = st.cursors + [
+            SensorCursor(pending=_EMPTY_CHUNK)
+            for _ in range(new_capacity - len(st.cursors))
+        ]
+        self.n_sensors = new_capacity
+        self.state = FleetState(cursors=cursors, atlas=atlas, tracks=tracks)
+
+    def _ingest(self, chunks, final) -> FleetResult:
         st = self.state
         s_count = st.n_sensors
         if len(chunks) != s_count:
             raise ValueError(
                 f"feed expects {s_count} per-sensor chunks, got {len(chunks)}"
             )
+        if isinstance(final, bool):
+            final = np.full(s_count, final, bool)
+        else:
+            final = np.asarray(final, bool)
+            if final.shape != (s_count,):
+                raise ValueError(
+                    f"final mask must have shape ({s_count},), got {final.shape}"
+                )
         batcher = self.config.batcher
         merged_all, bounds_all, consumed_all = [], [], []
         # Phase A (fallible): validate + window every sensor BEFORE any
@@ -304,7 +479,7 @@ class FleetPipeline:
             merged = monotone_merge(
                 cur.pending, x, y, t, p, cur.last_t, label=f"sensor {s}"
             )
-            if final:
+            if final[s]:
                 bounds = dual_threshold_bounds(merged[2], batcher)
                 consumed = len(merged[2])
             else:
@@ -376,7 +551,7 @@ class FleetPipeline:
             final_tracks, clusters, mets, states, atlas = self._step(
                 packed, bv, st.tracks, atlas_in,
                 np.stack([tag0, n_valid.astype(np.int32)]),
-                bool((n_valid == w_max).all()),
+                self.uniform_fast_path and bool((n_valid == w_max).all()),
             )
         self.state = FleetState(
             cursors=st.cursors, atlas=atlas, tracks=final_tracks

@@ -163,6 +163,24 @@ class StreamingPipeline:
         )
         return self._emit(merged, bounds, consumed)
 
+    def feed_chunk(
+        self, chunk: tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray] | None
+    ) -> ScanResult:
+        """:meth:`feed` over a packed ``(x, y, t, p)`` chunk tuple — the
+        wire shape the fleet/service layers pass around (``None`` = idle,
+        an empty feed). Lets a dedicated single-sensor pipeline consume
+        the exact per-session chunk stream a
+        :class:`~repro.serve.service.DetectionService` session receives,
+        which is how the service's bit-identity contract is pinned."""
+        if chunk is None:
+            chunk = (_EMPTY, _EMPTY, _EMPTY, _EMPTY)
+        return self.feed(*chunk)
+
+    @property
+    def backlog(self) -> int:
+        """Events absorbed but not yet windowed (the batcher remainder)."""
+        return self.state.pending_count
+
     def flush(self) -> ScanResult:
         """Close and process the trailing partial window (end of stream).
 

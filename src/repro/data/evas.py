@@ -13,6 +13,7 @@ changes:
 from __future__ import annotations
 
 from pathlib import Path
+from typing import Iterator
 
 import numpy as np
 
@@ -47,9 +48,37 @@ def load_recording(path: str | Path) -> Recording:
 
 def load_validation_suite(directory: str | Path | None = None) -> list[Recording]:
     """Load real EVAS recordings if present, else the synthetic suite
-    calibrated to the paper's statistics (DESIGN.md §6)."""
+    calibrated to the paper's statistics (DESIGN.md §6).
+
+    Files are ordered by *name*, never by directory enumeration order —
+    ``glob`` reflects filesystem insertion order on some platforms, and
+    suite ordering decides sweep-output ordering, which must be stable
+    across machines (regression-tested in tests/test_data_io.py).
+    """
     if directory is not None:
-        files = sorted(Path(directory).glob("*.npz"))
+        files = sorted(Path(directory).glob("*.npz"), key=lambda f: f.name)
         if files:
             return [load_recording(f) for f in files]
     return make_validation_suite()
+
+
+def iter_chunks(
+    rec: Recording, chunk_us: int = 20_000
+) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """Chunked replay over a recording — the shape a live EBC client feeds.
+
+    Yields ``(x, y, t, p)`` slices covering fixed ``chunk_us`` spans of
+    *event time*, anchored at the first event (the cadence a live sensor
+    delivers to :class:`repro.serve.service.DetectionService` or a
+    streaming/fleet pipeline). Chunks partition the stream exactly:
+    concatenating every chunk reproduces the recording's arrays verbatim,
+    and a span containing no events yields empty arrays (a live client's
+    heartbeat) rather than being skipped, so chunk index x ``chunk_us``
+    stays aligned with wall time.
+    """
+    if chunk_us < 1:
+        raise ValueError(f"chunk_us must be >= 1, got {chunk_us}")
+    from repro.core.events import stride_bounds  # data<->core: import lazily
+
+    for lo, hi, _ in stride_bounds(rec.t, chunk_us):
+        yield rec.x[lo:hi], rec.y[lo:hi], rec.t[lo:hi], rec.p[lo:hi]

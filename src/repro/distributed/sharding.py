@@ -202,6 +202,33 @@ def shard_fleet_carry(tree: Any, mesh: Mesh | None) -> Any:
     return jax.tree.map(place, tree)
 
 
+def grow_fleet_carry(tree: Any, new_size: int, mesh: Mesh | None) -> Any:
+    """Migrate a stacked fleet carry into a larger slot pool.
+
+    Every leaf is zero-padded along the leading sensor dim to
+    ``new_size`` (zeroed slots are exactly the fresh-sensor initial
+    state) and the grown pytree is re-placed with
+    :func:`shard_fleet_carry`, so a capacity-tier promotion keeps the
+    carry sharded over the ``sensor`` axis — including the case where
+    the old capacity did not divide the axis but the new one does.
+    """
+
+    def pad(leaf):
+        extra = new_size - leaf.shape[0]
+        if extra < 0:
+            raise ValueError(
+                f"fleet carry has {leaf.shape[0]} slots, cannot shrink to "
+                f"{new_size}"
+            )
+        if extra == 0:
+            return leaf
+        return jnp.concatenate(
+            [leaf, jnp.zeros((extra,) + leaf.shape[1:], leaf.dtype)], axis=0
+        )
+
+    return shard_fleet_carry(jax.tree.map(pad, tree), mesh)
+
+
 def hint_fleet(tree: Any) -> Any:
     """Sensor-axis sharding hint over every leaf of a stacked fleet pytree
     (identity without an active mesh; see :func:`hint`)."""

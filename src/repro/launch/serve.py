@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.launch.train import reduced_config
 from repro.models.transformer import init_params
-from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.serve.lm import EngineConfig, Request, ServingEngine
 
 
 def serve_demo(

@@ -1,6 +1,29 @@
-from repro.serve.engine import (  # noqa: F401
+"""Layered serving stack (DESIGN.md Sec. 11).
+
+* ``batcher``  — the paper's dual-threshold admission policy as a
+  generic, fake-clock-testable primitive.
+* ``sessions`` — per-sensor session lifecycle (attach / feed / detach,
+  monotone-timestamp enforcement, latency + backlog accounting).
+* ``service``  — :class:`DetectionService`: micro-batched detection
+  serving over the slot-pooled fleet engine.
+* ``lm``       — the batched LM engine, a thin client of the shared
+  batcher (``repro.serve.engine`` remains as a shim).
+"""
+from repro.serve.batcher import (  # noqa: F401
+    AdmissionConfig,
+    DualThresholdAdmitter,
+)
+from repro.serve.lm import (  # noqa: F401
     DualThresholdBatcher,
     EngineConfig,
     Request,
     ServingEngine,
+)
+from repro.serve.sessions import (  # noqa: F401
+    SensorSession,
+    SessionStats,
+)
+from repro.serve.service import (  # noqa: F401
+    DetectionService,
+    ServedFeed,
 )

@@ -1,0 +1,161 @@
+"""Dual-threshold admission policy as a generic, workload-agnostic primitive.
+
+The paper's client buffers camera events and closes a batch when EITHER
+``time_threshold_us`` (20,000 us) elapses OR ``size_threshold`` (250
+events) accumulates — Sec. III-A — bounding both latency (time cut) and
+work granularity (size cut). The same policy governs every admission
+point in this repo's serving stack:
+
+* the **detection service** admits a fleet step when the oldest queued
+  sensor chunk is ``max_delay_s`` old or ``max_items`` events are queued
+  fleet-wide (:mod:`repro.serve.service`),
+* the **LM engine** admits a request batch when the oldest request is
+  ``max_delay_s`` old or ``max_items`` requests queue up
+  (:mod:`repro.serve.lm`).
+
+:class:`DualThresholdAdmitter` is the one implementation both ride on.
+It holds no threads and never sleeps: callers inject ``clock`` (any
+``() -> float`` in seconds, ``time.monotonic`` by default), poll
+:meth:`DualThresholdAdmitter.ready`, and drain with
+:meth:`DualThresholdAdmitter.pop` — so the policy is exactly testable
+with a fake clock and composes with any event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Generic, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Dual-threshold close rule: oldest item age OR total queued weight.
+
+    ``max_items`` counts *weight*, not entries: each submit carries a
+    weight (1 by default), so the same config expresses "250 events"
+    (detection chunks weighted by event count) and "8 requests" (LM
+    requests at unit weight).
+    """
+
+    max_delay_s: float = 0.020  # paper: 20 ms window
+    max_items: int = 250  # paper: 250 events
+
+    def __post_init__(self):
+        if self.max_delay_s < 0:
+            raise ValueError(f"max_delay_s must be >= 0, got {self.max_delay_s}")
+        if self.max_items < 1:
+            raise ValueError(f"max_items must be >= 1, got {self.max_items}")
+
+
+@dataclasses.dataclass
+class _Entry(Generic[T]):
+    arrival_s: float
+    item: T
+    weight: int
+
+
+class DualThresholdAdmitter(Generic[T]):
+    """Close a batch at ``max_delay_s`` OR ``max_items`` — whichever first.
+
+    >>> clock = lambda: now[0]
+    >>> adm = DualThresholdAdmitter(AdmissionConfig(0.02, 4), clock)
+    >>> adm.submit("a"); adm.ready()
+    False
+    >>> now[0] += 0.025; adm.ready()
+    True
+    >>> adm.pop()
+    ['a']
+    """
+
+    def __init__(
+        self,
+        config: AdmissionConfig = AdmissionConfig(),
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.config = config
+        self.clock = clock
+        self._queue: list[_Entry[T]] = []
+        self._weight = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_weight(self) -> int:
+        return self._weight
+
+    @property
+    def items(self) -> list[T]:
+        """Queued items in arrival order (read-only view)."""
+        return [e.item for e in self._queue]
+
+    def oldest_age_s(self) -> float:
+        """Seconds since the oldest queued item arrived (0 when empty)."""
+        if not self._queue:
+            return 0.0
+        return self.clock() - self._queue[0].arrival_s
+
+    def submit(self, item: T, weight: int = 1) -> None:
+        """Queue an item, stamped with the injected clock's now."""
+        if weight < 0:
+            raise ValueError(f"weight must be >= 0, got {weight}")
+        self._queue.append(_Entry(self.clock(), item, weight))
+        self._weight += weight
+
+    def discard(self, item: T) -> int:
+        """Drop every queued entry equal to ``item`` (returns the count).
+
+        For producers that leave the queue out of band — e.g. a detached
+        detection session whose chunks were consumed by its final step:
+        its stale entries must not keep aging (or weighing) toward the
+        next admission, which would fire the time cut spuriously for
+        everyone else.
+        """
+        keep = [e for e in self._queue if e.item != item]
+        dropped = len(self._queue) - len(keep)
+        if dropped:
+            self._weight -= sum(
+                e.weight for e in self._queue if e.item == item
+            )
+            self._queue = keep
+        return dropped
+
+    def ready(self) -> bool:
+        if not self._queue:
+            return False
+        if self._weight >= self.config.max_items:
+            return True
+        return self.oldest_age_s() >= self.config.max_delay_s
+
+    def pop(self) -> list[T]:
+        """Drain one admitted batch: the longest arrival-order prefix whose
+        cumulative weight fits ``max_items`` (always at least one item, so
+        an over-weight head entry cannot wedge the queue)."""
+        out: list[T] = []
+        acc = 0
+        while self._queue:
+            head = self._queue[0]
+            if out and acc + head.weight > self.config.max_items:
+                break
+            out.append(head.item)
+            acc += head.weight
+            self._weight -= head.weight
+            self._queue.pop(0)
+        return out
+
+    def pop_all(self) -> list[T]:
+        """Drain the whole queue regardless of weight (micro-batch
+        consumers that can absorb arbitrarily many items per step)."""
+        out = [e.item for e in self._queue]
+        self._queue.clear()
+        self._weight = 0
+        return out
+
+
+def drain(admitter: DualThresholdAdmitter[Any], force: bool = False) -> list[Any]:
+    """``pop_all`` if the admitter is ready (or ``force``), else ``[]``."""
+    if force or admitter.ready():
+        return admitter.pop_all()
+    return []

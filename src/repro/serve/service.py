@@ -1,0 +1,258 @@
+"""DetectionService: dynamic sensor sessions over the slot-pooled fleet.
+
+The serving-shaped top of the detection stack (DESIGN.md Sec. 11).
+Sensors attach and detach at will; every attached session feeds raw
+event chunks at its own cadence; the service micro-batches the queued
+chunks under the paper's dual-threshold admission policy
+(:mod:`repro.serve.batcher`) and drives the whole set through ONE
+slot-pooled :class:`~repro.core.pipeline.fleet.FleetPipeline` step.
+
+Contracts:
+
+* **Bit-identity.** Every session's results — concatenated over its
+  lifetime, including the detach tail — are bit-identical to a
+  dedicated :class:`~repro.core.pipeline.stream.StreamingPipeline` fed
+  the same chunks (and hence to the offline scan driver), for ANY
+  interleaving of attach / feed / idle / detach across sessions,
+  including slot recycling and capacity-tier promotion mid-stream.
+  Pinned by tests/test_serve_service.py.
+* **Compile discipline.** Slot occupancy never appears in a compiled
+  shape: the fleet step is compiled per (pool capacity, windows-per-feed)
+  only, so attach/detach churn costs zero compiles and a churn workload
+  cycling 1 -> max sessions compiles at most one fleet step per
+  capacity tier (the service pins ``uniform_fast_path=False`` so the
+  static uniform variant cannot double that).
+* **Atomic validation.** A chunk that is out of order — within itself
+  or against its session's stream — raises ``ValueError`` at the
+  ``feed`` call, before it is queued: no other session's state, and not
+  even the offending session's state, is touched.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.pipeline.config import PipelineConfig
+from repro.core.pipeline.fleet import DEFAULT_TIERS, FleetPipeline, tier_capacity
+from repro.core.pipeline.scan import ScanResult
+from repro.serve.batcher import AdmissionConfig, DualThresholdAdmitter
+from repro.serve.sessions import DETACHED, LIVE, SensorSession
+
+
+@dataclasses.dataclass
+class ServedFeed:
+    """One session's share of one fleet step."""
+
+    sid: int
+    result: ScanResult
+    latency_ms: float  # oldest queued chunk's arrival -> results ready
+
+
+class DetectionService:
+    """Micro-batched detection serving over a slot pool of sensor sessions.
+
+    >>> svc = DetectionService(PipelineConfig(), tiers=(4, 8))
+    >>> sid = svc.attach("station-7")
+    >>> done = svc.feed(sid, x, y, t, p)   # [] until admission fires
+    >>> done = svc.pump(force=True)        # or step the fleet explicitly
+    >>> tail = svc.detach(sid)             # flush + recycle the slot
+
+    ``feed`` queues the (validated) chunk and steps the fleet only when
+    the admission policy fires — oldest queued chunk ``max_delay_s`` old
+    OR ``max_items`` events queued fleet-wide — so concurrent sessions
+    share one vmapped dispatch instead of paying one each. The returned
+    list carries every session's results from that step, not just the
+    caller's. ``pump(force=True)`` steps unconditionally (deterministic
+    drivers, tests, drain-before-shutdown).
+    """
+
+    def __init__(
+        self,
+        config: PipelineConfig = PipelineConfig(),
+        tiers: tuple[int, ...] = DEFAULT_TIERS,
+        admission: AdmissionConfig = AdmissionConfig(),
+        with_tracking: bool = True,
+        mesh=None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if not tiers or list(tiers) != sorted(set(tiers)):
+            raise ValueError(f"tiers must be strictly increasing, got {tiers}")
+        self.config = config
+        self.tiers = tuple(int(t) for t in tiers)
+        self.clock = clock
+        self._admit: DualThresholdAdmitter[int] = DualThresholdAdmitter(
+            admission, clock
+        )
+        self._fleet = FleetPipeline(
+            config,
+            n_sensors=self.tiers[0],
+            with_tracking=with_tracking,
+            mesh=mesh,
+            uniform_fast_path=False,  # compile discipline (module docstring)
+        )
+        self._sessions: dict[int, SensorSession] = {}  # all, live + detached
+        self._by_slot: dict[int, int] = {}  # slot -> sid, live only
+        self._free: list[int] = list(range(self.tiers[0]))  # sorted
+        self._next_sid = 0
+        self.promotions = 0  # capacity-tier promotions performed
+
+    # ------------------------------------------------------------------
+    # Introspection.
+    # ------------------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Current slot-pool capacity (the active tier)."""
+        return self._fleet.n_sensors
+
+    @property
+    def n_sessions(self) -> int:
+        """Live (attached) sessions."""
+        return len(self._by_slot)
+
+    def session(self, sid: int) -> SensorSession:
+        """Session record (live or detached) — stats, slot, state."""
+        return self._sessions[sid]
+
+    def backlog(self, sid: int) -> int:
+        """Events accepted for ``sid`` but not yet windowed: the service
+        queue plus the slot's batcher remainder inside the fleet carry."""
+        sess = self._sessions[sid]
+        queued = sess.queued_events
+        if sess.state == LIVE:
+            queued += self._fleet.state.cursors[sess.slot].pending_count
+        return queued
+
+    # ------------------------------------------------------------------
+    # Lifecycle.
+    # ------------------------------------------------------------------
+
+    def attach(self, name: str | None = None) -> int:
+        """Admit a new sensor; returns its session id.
+
+        Takes the lowest free slot; with no slot free, promotes the pool
+        to the next capacity tier first (carry migration — live sessions
+        are unaffected, their results stay bit-identical across the
+        promotion).
+        """
+        if not self._free:
+            new_cap = tier_capacity(self.capacity + 1, self.tiers)
+            old_cap = self.capacity
+            self._fleet.grow(new_cap)
+            self._free.extend(range(old_cap, new_cap))
+            self.promotions += 1
+        slot = self._free.pop(0)
+        sid = self._next_sid
+        self._next_sid += 1
+        self._sessions[sid] = SensorSession(
+            sid=sid,
+            slot=slot,
+            name=name or f"session-{sid}",
+            clock=self.clock,
+        )
+        self._by_slot[slot] = sid
+        return sid
+
+    def feed(self, sid: int, x, y, t, p) -> list[ServedFeed]:
+        """Queue one raw event chunk for ``sid``; step the fleet if the
+        admission policy fires. Returns the feeds completed by this call
+        (every admitted session's, not just ``sid``'s) — ``[]`` while
+        the micro-batch is still filling."""
+        sess = self._live(sid)
+        n = sess.accept(x, y, t, p)
+        if n:
+            self._admit.submit(sid, weight=n)
+        if self._admit.ready():
+            return self.pump(force=True)
+        return []
+
+    def pump(self, force: bool = False) -> list[ServedFeed]:
+        """Run one fleet step over every queued chunk (if admission fired
+        or ``force``). Results are delivered per session, slot-ordered."""
+        if not force and not self._admit.ready():
+            return []
+        self._admit.pop_all()
+        dirty = [
+            (slot, sid)
+            for slot, sid in sorted(self._by_slot.items())
+            if self._sessions[sid].queued_events
+        ]
+        if not dirty:
+            return []
+        return self._step({slot: sid for slot, sid in dirty}, final_slots=())
+
+    def detach(self, sid: int) -> ScanResult:
+        """Close a session: its queued chunks and trailing partial window
+        are processed in one final fleet step (other sessions' queues are
+        untouched), the slot carry is zeroed and recycled, and the tail
+        result is returned. The session object stays readable for stats."""
+        sess = self._live(sid)
+        out = self._step({sess.slot: sid}, final_slots=(sess.slot,))
+        self._admit.discard(sid)  # consumed out of band: stop its entries
+        sess.state = DETACHED     # aging toward the next admission
+        del self._by_slot[sess.slot]
+        bisect.insort(self._free, sess.slot)
+        self._fleet.reset_slots([sess.slot])
+        sess.slot = -1
+        return out[0].result
+
+    def forget(self, sid: int) -> None:
+        """Drop a *detached* session's stats record. Detached sessions are
+        retained for inspection, not forever by obligation — a long-lived
+        churny deployment calls this (or periodically sweeps
+        ``detached_sessions``) to bound host memory."""
+        sess = self._sessions.get(sid)
+        if sess is None:
+            return
+        if sess.state != DETACHED:
+            raise RuntimeError(f"session {sid} is {sess.state}; detach first")
+        del self._sessions[sid]
+
+    @property
+    def detached_sessions(self) -> list[int]:
+        """Sids of retained detached-session records (see :meth:`forget`)."""
+        return [
+            sid for sid, s in self._sessions.items() if s.state == DETACHED
+        ]
+
+    # ------------------------------------------------------------------
+    # Internals.
+    # ------------------------------------------------------------------
+
+    def _live(self, sid: int) -> SensorSession:
+        sess = self._sessions.get(sid)
+        if sess is None:
+            raise KeyError(f"unknown session id {sid}")
+        if sess.state != LIVE:
+            raise RuntimeError(f"session {sid} is {sess.state}")
+        return sess
+
+    def _step(
+        self, by_slot: dict[int, int], final_slots: tuple[int, ...]
+    ) -> list[ServedFeed]:
+        """One fleet step over the named slots' merged queues."""
+        chunks: list = [None] * self.capacity
+        arrivals: dict[int, float | None] = {}
+        for slot, sid in by_slot.items():
+            chunks[slot], arrivals[sid] = self._sessions[sid].take()
+        final = np.zeros(self.capacity, bool)
+        if final_slots:
+            final[list(final_slots)] = True
+        out = self._fleet.feed(chunks, final=final)
+        now = self.clock()
+        served: list[ServedFeed] = []
+        for slot in sorted(by_slot):
+            sid = by_slot[slot]
+            sess = self._sessions[sid]
+            result = out.sensor(slot)
+            arrival = arrivals[sid]
+            latency_ms = None if arrival is None else (now - arrival) * 1e3
+            sess.record_step(result.num_windows, latency_ms)
+            served.append(
+                ServedFeed(sid=sid, result=result, latency_ms=latency_ms or 0.0)
+            )
+        return served

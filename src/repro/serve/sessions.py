@@ -1,0 +1,149 @@
+"""Per-sensor session lifecycle for the detection service.
+
+A :class:`SensorSession` is the service-side identity of one live event
+camera: it owns the sensor's slot in the fleet pool, validates the
+monotone-timestamp contract at *accept* time (a bad chunk is refused
+before it is ever queued, so the micro-batch a session rides in can
+never be poisoned by it), buffers accepted chunks until the admission
+policy releases a fleet step, and keeps the per-session accounting the
+operator reads: feeds, events, windows, backlog, and service-latency
+samples.
+
+Sessions are plain host objects — all device state lives in the fleet
+carry, keyed by ``slot``. The lifecycle is strictly::
+
+    attach (service assigns a zeroed slot)
+      -> feed* (validate -> queue -> fleet step on admission)
+      -> detach (flush trailing window, slot zeroed + recycled)
+
+after which the session object survives as a read-only stats record
+(``state == "detached"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.events import validate_monotone
+
+Chunk = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+LIVE = "live"
+DETACHED = "detached"
+
+
+# Latency samples retained per session (a sliding window, so a long-lived
+# session's stats stay O(1) in memory; counters stay exact forever).
+MAX_LATENCY_SAMPLES = 1024
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Monotone per-session counters plus service-latency samples.
+
+    ``latency_ms`` keeps only the most recent :data:`MAX_LATENCY_SAMPLES`
+    samples — percentiles describe recent behaviour, and a session
+    feeding at live cadence for days cannot grow host memory unboundedly.
+    """
+
+    feeds: int = 0  # chunks accepted (empty chunks are no-ops, not counted)
+    events: int = 0  # events accepted
+    steps: int = 0  # fleet steps this session's chunks rode in
+    windows: int = 0  # windows closed and returned to the session
+    latency_ms: list[float] = dataclasses.field(default_factory=list)
+
+    def record_latency(self, latency_ms: float) -> None:
+        self.latency_ms.append(latency_ms)
+        if len(self.latency_ms) > MAX_LATENCY_SAMPLES:
+            del self.latency_ms[: len(self.latency_ms) - MAX_LATENCY_SAMPLES]
+
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile of the retained latency samples (0 when none)."""
+        if not self.latency_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latency_ms), q))
+
+
+@dataclasses.dataclass
+class SensorSession:
+    """One attached sensor: slot ownership, validation, chunk queue, stats."""
+
+    sid: int
+    slot: int
+    name: str
+    clock: Callable[[], float]
+    state: str = LIVE
+    last_t: int | None = None  # newest accepted timestamp
+    stats: SessionStats = dataclasses.field(default_factory=SessionStats)
+    # Chunks accepted but not yet absorbed by a fleet step, plus the
+    # arrival stamp of the oldest one (service-latency measurement
+    # origin; None while the queue is empty).
+    _queue: list[Chunk] = dataclasses.field(default_factory=list)
+    _queued_events: int = 0
+    _oldest_arrival_s: float | None = None
+
+    @property
+    def queued_events(self) -> int:
+        """Events accepted but not yet handed to the fleet step."""
+        return self._queued_events
+
+    def accept(self, x, y, t, p) -> int:
+        """Validate and queue one raw chunk; returns its event count.
+
+        Raises ``ValueError`` (chunk not absorbed, session unharmed) when
+        the chunk is out of order within itself or against this session's
+        stream — the same contract :class:`StreamingPipeline` enforces,
+        applied here so the error surfaces at the offending ``feed`` call
+        rather than inside a later micro-batched fleet step.
+        """
+        if self.state != LIVE:
+            raise RuntimeError(f"session {self.sid} is {self.state}")
+        t = np.asarray(t, np.int64)
+        validate_monotone(t, self.last_t, label=f"session {self.sid}")
+        n = len(t)
+        if n == 0:
+            return 0  # heartbeat: nothing to queue
+        self._queue.append(
+            (np.asarray(x), np.asarray(y), t, np.asarray(p))
+        )
+        if self._oldest_arrival_s is None:
+            self._oldest_arrival_s = self.clock()
+        self._queued_events += n
+        self.last_t = int(t[-1])
+        self.stats.feeds += 1
+        self.stats.events += n
+        return n
+
+    def take(self) -> tuple[Chunk | None, float | None]:
+        """Drain the queue as one merged chunk for a fleet step.
+
+        Returns ``(chunk, oldest_arrival_s)`` — ``(None, None)`` when
+        nothing is queued. Merging is safe: chunks were validated in
+        accept order, and the streaming engine is bit-identical under
+        any re-chunking, so one merged feed returns exactly the windows
+        the individual feeds would have.
+        """
+        if not self._queue:
+            return None, None
+        if len(self._queue) == 1:
+            chunk = self._queue[0]
+        else:
+            chunk = tuple(
+                np.concatenate([c[i] for c in self._queue]) for i in range(4)
+            )
+        arrival = self._oldest_arrival_s
+        self._queue.clear()
+        self._queued_events = 0
+        self._oldest_arrival_s = None
+        return chunk, arrival
+
+    def record_step(self, n_windows: int, latency_ms: float | None) -> None:
+        """Account one fleet step; ``latency_ms`` is None when the step
+        carried no queued chunk for this session (a bare detach flush),
+        which is not a service-latency sample."""
+        self.stats.steps += 1
+        self.stats.windows += n_windows
+        if latency_ms is not None:
+            self.stats.record_latency(latency_ms)

@@ -1,7 +1,16 @@
-"""EVAS interchange format round-trip + synthetic suite integrity."""
-import numpy as np
+"""EVAS interchange format round-trip, deterministic suite ordering,
+chunked replay (iter_chunks), + synthetic suite integrity."""
+import dataclasses
 
-from repro.data.evas import load_recording, load_validation_suite, save_recording
+import numpy as np
+import pytest
+
+from repro.data.evas import (
+    iter_chunks,
+    load_recording,
+    load_validation_suite,
+    save_recording,
+)
 from repro.data.synthetic import KIND_RSO, make_recording, make_validation_suite
 
 
@@ -22,6 +31,82 @@ def test_load_suite_prefers_files(tmp_path):
     save_recording(rec, tmp_path / "a.npz")
     suite = load_validation_suite(tmp_path)
     assert len(suite) == 1 and len(suite[0]) == len(rec)
+
+
+def test_load_suite_order_is_name_sorted_not_creation_order(tmp_path):
+    """Suite ordering decides sweep-output ordering; it must be the sorted
+    file names, independent of directory insertion order (glob reflects
+    filesystem order on some platforms)."""
+    base = make_recording(seed=2, duration_s=0.2)
+    for stem in ("bravo", "alpha", "delta", "charlie"):  # scrambled creation
+        save_recording(dataclasses.replace(base, name=stem), tmp_path / f"{stem}.npz")
+    suite = load_validation_suite(tmp_path)
+    assert [r.name for r in suite] == ["alpha", "bravo", "charlie", "delta"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked replay (iter_chunks): the live-client feed shape.
+# ---------------------------------------------------------------------------
+
+def test_iter_chunks_concatenation_reproduces_recording_exactly():
+    rec = make_recording(seed=7, duration_s=0.3, n_rsos=1)
+    chunks = list(iter_chunks(rec, chunk_us=20_000))
+    for field, i in (("x", 0), ("y", 1), ("t", 2), ("p", 3)):
+        cat = np.concatenate([c[i] for c in chunks])
+        np.testing.assert_array_equal(cat, getattr(rec, field), err_msg=field)
+
+
+def test_iter_chunks_boundaries_are_event_time_strides():
+    rec = make_recording(seed=8, duration_s=0.25)
+    chunk_us = 20_000
+    t0 = int(rec.t[0])
+    chunks = list(iter_chunks(rec, chunk_us=chunk_us))
+    for i, (_, _, t, _) in enumerate(chunks):
+        lo = t0 + i * chunk_us
+        if len(t):
+            assert lo <= int(t[0]) and int(t[-1]) < lo + chunk_us, i
+    # Strides are anchored at the first event and cover through the last.
+    assert len(chunks) == (int(rec.t[-1]) - t0) // chunk_us + 1
+
+
+def test_iter_chunks_yields_empty_chunks_for_dead_strides():
+    # A 50 ms silence inside a stream: the quiet strides still come out
+    # (as empty arrays), keeping chunk index aligned with wall time.
+    t = np.array([0, 1_000, 70_000, 71_000], np.int64)
+    z = np.zeros(4, np.int32)
+    rec = make_recording(seed=0, duration_s=0.01)
+    rec = dataclasses.replace(
+        rec, x=z, y=z, t=t, p=z, kind=z, obj=z, duration_us=71_000
+    )
+    sizes = [len(c[2]) for c in iter_chunks(rec, chunk_us=20_000)]
+    assert sizes == [2, 0, 0, 2]
+
+
+def test_iter_chunks_rejects_bad_chunk_us():
+    rec = make_recording(seed=0, duration_s=0.01)
+    with pytest.raises(ValueError, match="chunk_us"):
+        next(iter_chunks(rec, chunk_us=0))
+
+
+def test_iter_chunks_feeds_streaming_pipeline_to_scan_identity():
+    # The advertised use: chunked replay into the streaming engine equals
+    # the offline scan bit-for-bit.
+    from repro.core.pipeline import (
+        PipelineConfig,
+        StreamingPipeline,
+        run_recording_scan,
+    )
+
+    rec = make_recording(seed=9, duration_s=0.2, n_rsos=1)
+    config = PipelineConfig()
+    sp = StreamingPipeline(config)
+    parts = [sp.feed_chunk(c) for c in iter_chunks(rec)] + [sp.flush()]
+    scan = run_recording_scan(rec, config)
+    assert sum(p.num_windows for p in parts) == scan.num_windows
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.clusters.count) for p in parts]),
+        np.asarray(scan.clusters.count),
+    )
 
 
 def test_synthetic_suite_structure():

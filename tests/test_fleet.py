@@ -16,6 +16,7 @@ from repro.core.pipeline import (
     PipelineConfig,
     StreamingPipeline,
     run_recording_scan,
+    tier_capacity,
 )
 
 
@@ -269,3 +270,165 @@ print("SHARDED-FLEET-OK")
         device_count=4,
     )
     assert "SHARDED-FLEET-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Slot pool: grow (tier promotion), reset (slot recycling), per-slot flush.
+# ---------------------------------------------------------------------------
+
+def _feed_whole(fp, slot, rec):
+    """Feed a whole recording into one slot in two chunks; return parts."""
+    half = len(rec) // 2
+    parts = []
+    for lo, hi in ((0, half), (half, len(rec))):
+        chunks = [None] * fp.n_sensors
+        chunks[slot] = (rec.x[lo:hi], rec.y[lo:hi], rec.t[lo:hi], rec.p[lo:hi])
+        parts.append(fp.feed(chunks).sensor(slot))
+    parts.append(fp.flush_slots([slot]).sensor(slot))
+    return parts
+
+
+def test_tier_capacity_schedule():
+    assert [tier_capacity(n, (4, 8, 16)) for n in (1, 4, 5, 8, 9, 16)] == \
+        [4, 4, 8, 8, 16, 16]
+    assert tier_capacity(17, (4, 8, 16)) == 32  # doubles past the last tier
+    assert tier_capacity(33, (4, 8, 16)) == 64
+    with pytest.raises(ValueError, match="at least one"):
+        tier_capacity(0)
+
+
+def test_fleet_grow_preserves_live_sensor_identity():
+    recs = _fleet_recordings()
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    # Half-feed sensors 0/1, promote the pool mid-stream, then finish them
+    # while two new sensors stream on the freshly grown slots.
+    half = [len(r) // 2 for r in recs[:2]]
+    first = fp.feed([
+        (r.x[:h], r.y[:h], r.t[:h], r.p[:h]) for r, h in zip(recs, half)
+    ])
+    parts = {s: [first.sensor(s)] for s in range(2)}
+    fp.grow(4)
+    assert fp.n_sensors == 4 and len(fp.state.cursors) == 4
+    assert fp.state.atlas.shape[0] == 4
+    second = fp.feed([
+        (recs[0].x[half[0]:], recs[0].y[half[0]:],
+         recs[0].t[half[0]:], recs[0].p[half[0]:]),
+        (recs[1].x[half[1]:], recs[1].y[half[1]:],
+         recs[1].t[half[1]:], recs[1].p[half[1]:]),
+        (recs[2].x, recs[2].y, recs[2].t, recs[2].p),
+        (recs[3].x, recs[3].y, recs[3].t, recs[3].p),
+    ])
+    tail = fp.flush()
+    for s in range(4):
+        if s >= 2:
+            parts[s] = [second.sensor(s), tail.sensor(s)]
+        else:
+            parts[s] += [second.sensor(s), tail.sensor(s)]
+        _assert_stream_equals_scan(parts[s], run_recording_scan(recs[s], config))
+
+
+def test_fleet_grow_rejects_shrink_and_is_noop_at_size():
+    fp = FleetPipeline(PipelineConfig(), n_sensors=2)
+    with pytest.raises(ValueError, match="shrink"):
+        fp.grow(1)
+    fp.grow(2)  # no-op
+    assert fp.n_sensors == 2
+
+
+def test_fleet_reset_slots_recycles_bit_identically():
+    recs = _fleet_recordings()
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    # First tenant streams to completion on slot 0 (slot 1 idles along).
+    parts_a = _feed_whole(fp, 0, recs[0])
+    _assert_stream_equals_scan(parts_a, run_recording_scan(recs[0], config))
+    # Recycle slot 0; the second tenant restarts from t=0 — without the
+    # reset its timestamps would regress and its atlas would be stale.
+    fp.reset_slots([0])
+    assert fp.state.cursors[0].next_tag == 0
+    parts_b = _feed_whole(fp, 0, recs[1])
+    _assert_stream_equals_scan(parts_b, run_recording_scan(recs[1], config))
+
+
+def test_fleet_flush_slots_leaves_other_remainders_pending():
+    recs = _fleet_recordings()[:2]
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    half = [len(r) // 2 for r in recs]
+    first = fp.feed([
+        (r.x[:h], r.y[:h], r.t[:h], r.p[:h]) for r, h in zip(recs, half)
+    ])
+    pending_1 = fp.state.cursors[1].pending_count
+    assert pending_1 > 0
+    tail0 = fp.flush_slots([0])
+    # Slot 0's trailing window closed; slot 1's remainder is untouched and
+    # its stream continues bit-identically.
+    assert tail0.n_windows[0] == 1 and tail0.n_windows[1] == 0
+    assert fp.state.cursors[0].pending_count == 0
+    assert fp.state.cursors[1].pending_count == pending_1
+    second = fp.feed([
+        None,
+        (recs[1].x[half[1]:], recs[1].y[half[1]:],
+         recs[1].t[half[1]:], recs[1].p[half[1]:]),
+    ])
+    tail1 = fp.flush_slots([1])
+    _assert_stream_equals_scan(
+        [first.sensor(1), second.sensor(1), tail1.sensor(1)],
+        run_recording_scan(recs[1], config),
+    )
+
+
+def test_fleet_final_mask_shape_validated():
+    fp = FleetPipeline(PipelineConfig(), n_sensors=2)
+    with pytest.raises(ValueError, match="final mask"):
+        fp.feed([None, None], final=np.zeros(3, bool))
+
+
+def test_fleet_grow_resharding(subproc):
+    """Tier promotion on a 4-device sensor mesh: a 2-slot carry cannot
+    shard over 4 devices (replicated), but after growing to 4 the carry
+    is sensor-sharded — and outputs match the unsharded fleet."""
+    out = subproc(
+        """
+import jax
+import numpy as np
+
+from repro.core.pipeline import FleetPipeline, PipelineConfig
+from repro.data.synthetic import make_recording
+from repro.launch.mesh import make_mesh
+
+assert jax.device_count() == 4
+mesh = make_mesh((4,), ("sensor",))
+config = PipelineConfig()
+recs = [make_recording(seed=20 + s, duration_s=0.15, n_rsos=1) for s in range(4)]
+chunks = [(r.x, r.y, r.t, r.p) for r in recs]
+
+plain = FleetPipeline(config, n_sensors=2)
+sharded = FleetPipeline(config, n_sensors=2, mesh=mesh)
+assert "sensor" not in str(sharded.state.atlas.sharding.spec)  # 2 % 4 != 0
+for fp in (plain, sharded):
+    fp.feed(chunks[:2])
+    fp.grow(4)
+spec = sharded.state.atlas.sharding.spec
+assert "sensor" in str(spec), spec
+a = plain.feed([None, None, chunks[2], chunks[3]])
+b = sharded.feed([None, None, chunks[2], chunks[3]])
+np.testing.assert_array_equal(
+    np.asarray(a.clusters.count), np.asarray(b.clusters.count)
+)
+ta, tb = plain.flush(), sharded.flush()
+np.testing.assert_array_equal(
+    np.asarray(ta.clusters.count), np.asarray(tb.clusters.count)
+)
+for field in ta.final_tracks._fields:
+    np.testing.assert_array_equal(
+        np.asarray(getattr(ta.final_tracks, field)),
+        np.asarray(getattr(tb.final_tracks, field)),
+        err_msg=field,
+    )
+print("GROW-RESHARD-OK")
+""",
+        device_count=4,
+    )
+    assert "GROW-RESHARD-OK" in out

@@ -1,0 +1,123 @@
+"""Dual-threshold admission primitive: fake-clock semantics, weights,
+prefix-pop rule, and the LM batcher as its thin client."""
+import pytest
+
+from repro.serve.batcher import AdmissionConfig, DualThresholdAdmitter, drain
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def test_empty_admitter_not_ready():
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 4), FakeClock())
+    assert not adm.ready()
+    assert adm.oldest_age_s() == 0.0
+    assert adm.pop() == [] and adm.pop_all() == []
+
+
+def test_time_threshold_fires_on_oldest_item():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 100), clock)
+    adm.submit("a")
+    clock.now = 0.015
+    adm.submit("b")
+    assert not adm.ready()  # oldest is 15 ms old
+    clock.now = 0.020
+    assert adm.ready()  # oldest hits exactly max_delay
+    assert adm.oldest_age_s() == pytest.approx(0.020)
+    assert adm.pop_all() == ["a", "b"]
+    assert not adm.ready()  # drained
+
+
+def test_size_threshold_counts_weight_not_entries():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 250), clock)
+    adm.submit("chunk1", weight=200)
+    assert not adm.ready()
+    adm.submit("chunk2", weight=50)  # total weight hits 250
+    assert adm.ready()
+    assert adm.pending_weight == 250
+
+
+def test_pop_takes_longest_prefix_within_weight():
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 4), FakeClock())
+    for item, w in [("a", 2), ("b", 2), ("c", 1)]:
+        adm.submit(item, weight=w)
+    assert adm.pop() == ["a", "b"]  # 2 + 2 fits; + c would exceed
+    assert adm.items == ["c"]
+    assert adm.pending_weight == 1
+
+
+def test_pop_never_wedges_on_overweight_head():
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 4), FakeClock())
+    adm.submit("huge", weight=100)
+    adm.submit("next", weight=1)
+    assert adm.pop() == ["huge"]  # at least one item always comes out
+    assert adm.items == ["next"]
+
+
+def test_drain_helper_respects_ready_and_force():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 100), clock)
+    adm.submit("a")
+    assert drain(adm) == []  # not ready, not forced
+    assert drain(adm, force=True) == ["a"]
+    adm.submit("b")
+    clock.now = 1.0
+    assert drain(adm) == ["b"]  # time threshold fired
+
+
+def test_config_and_weight_validation():
+    with pytest.raises(ValueError, match="max_items"):
+        AdmissionConfig(0.02, 0)
+    with pytest.raises(ValueError, match="max_delay_s"):
+        AdmissionConfig(-1.0, 8)
+    adm = DualThresholdAdmitter(AdmissionConfig(), FakeClock())
+    with pytest.raises(ValueError, match="weight"):
+        adm.submit("a", weight=-1)
+
+
+def test_lm_batcher_is_thin_client_of_admitter():
+    # The historical LM API — Request.arrival_s stamping, .queue view,
+    # pop_batch at max_batch — now rides the generic admitter.
+    from repro.serve.lm import DualThresholdBatcher, EngineConfig, Request
+
+    clock = FakeClock()
+    b = DualThresholdBatcher(
+        EngineConfig(max_delay_s=0.02, max_batch=3), clock=clock
+    )
+    clock.now = 0.5
+    r = Request(rid=0, tokens=[1])
+    b.submit(r)
+    assert r.arrival_s == 0.5
+    assert not b.ready()
+    for i in range(1, 4):
+        b.submit(Request(rid=i, tokens=[1]))
+    assert b.ready()  # 4 >= max_batch
+    batch = b.pop_batch()
+    assert [r.rid for r in batch] == [0, 1, 2]  # max_batch prefix
+    assert [r.rid for r in b.queue] == [3]
+
+
+def test_discard_removes_item_entries_and_weight():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 100), clock)
+    adm.submit("a", weight=30)
+    adm.submit("b", weight=10)
+    adm.submit("a", weight=20)
+    assert adm.discard("a") == 2
+    assert adm.items == ["b"] and adm.pending_weight == 10
+    # The dead entries no longer age toward the time threshold.
+    clock.now = 1.0
+    adm2 = DualThresholdAdmitter(AdmissionConfig(0.02, 100), clock)
+    adm2.submit("stale")
+    clock.now = 2.0
+    adm2.discard("stale")
+    adm2.submit("fresh")
+    assert not adm2.ready()  # only the fresh entry's age counts
+    assert adm.discard("missing") == 0

@@ -1,0 +1,374 @@
+"""DetectionService: session lifecycle over the slot-pooled fleet.
+
+Pins the two service-layer contracts from DESIGN.md Sec. 11:
+
+* **Bit-identity under churn** — for arbitrary interleavings of attach /
+  feed / idle / detach (including detach-then-reattach reusing a slot
+  and capacity-tier promotion mid-stream), every session's concatenated
+  results equal a dedicated ``StreamingPipeline`` / scan run of the same
+  chunks.
+* **Compile discipline** — a churn workload cycling 1 -> max sessions
+  compiles at most one fleet step per capacity tier (slot occupancy
+  never appears in a compiled shape).
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from test_streaming import _assert_stream_equals_scan
+
+from repro.core.events import BatcherConfig
+from repro.core.pipeline import PipelineConfig, run_recording_scan
+from repro.data.evas import iter_chunks
+from repro.serve import AdmissionConfig, DetectionService
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+
+@functools.lru_cache(maxsize=None)
+def _service_recordings(n: int = 4, duration_s: float = 0.25):
+    from repro.data.synthetic import make_recording
+
+    return tuple(
+        make_recording(seed=40 + s, duration_s=duration_s, n_rsos=1 + s % 2)
+        for s in range(n)
+    )
+
+
+def _prefix(rec, n: int):
+    """The recording's first ``n`` events (what a partial session saw)."""
+    return dataclasses.replace(
+        rec, x=rec.x[:n], y=rec.y[:n], t=rec.t[:n], p=rec.p[:n],
+        kind=rec.kind[:n], obj=rec.obj[:n],
+    )
+
+
+def _spaced_stream(seed: int, n: int, dt_us: int = 100):
+    """Synthetic evenly-spaced stream: every 100-event slice spans well
+    under 20 ms, so feeds in exact ``size_threshold`` slices close exactly
+    one window each (shape-deterministic for compile-count tests)."""
+    rng = np.random.default_rng(seed)
+    return (
+        rng.integers(40, 560, n).astype(np.int64),
+        rng.integers(40, 400, n).astype(np.int64),
+        (np.arange(n, dtype=np.int64) + 1) * dt_us,
+        rng.integers(0, 2, n).astype(np.int64),
+    )
+
+
+def _collect(served, parts):
+    for fd in served:
+        parts[fd.sid].append(fd.result)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity.
+# ---------------------------------------------------------------------------
+
+def test_service_sessions_bit_identical_to_scan():
+    """Three sessions (forcing one tier promotion) fed live-cadence chunks
+    concatenate to exactly the scan driver's outputs."""
+    recs = _service_recordings()[:3]
+    config = PipelineConfig()
+    svc = DetectionService(config, tiers=(2, 4), clock=FakeClock())
+    sids = [svc.attach(f"s{i}") for i in range(3)]
+    assert svc.capacity == 4 and svc.promotions == 1
+    parts = {sid: [] for sid in sids}
+    chunk_lists = [list(iter_chunks(r)) for r in recs]
+    for j in range(max(len(c) for c in chunk_lists)):
+        for i, cl in enumerate(chunk_lists):
+            if j < len(cl):
+                _collect(svc.feed(sids[i], *cl[j]), parts)
+        _collect(svc.pump(force=True), parts)
+    for i, sid in enumerate(sids):
+        parts[sid].append(svc.detach(sid))
+    for i, rec in enumerate(recs):
+        _assert_stream_equals_scan(
+            parts[sids[i]], run_recording_scan(rec, config)
+        )
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_service_random_churn_bit_identical(seed):
+    """Randomized attach / feed / idle / detach schedule — including slot
+    recycling and mid-stream tier promotion — against per-session scan
+    references over exactly the events each session fed."""
+    rng = np.random.default_rng(seed)
+    recs = _service_recordings()
+    config = PipelineConfig()
+    clock = FakeClock()
+    svc = DetectionService(
+        config, tiers=(2, 4),
+        admission=AdmissionConfig(max_delay_s=0.02, max_items=600),
+        clock=clock,
+    )
+    live: dict[int, dict] = {}
+    finished: list[tuple[int, dict]] = []
+    parts: dict[int, list] = {}
+
+    def detach(sid):
+        parts[sid].append(svc.detach(sid))
+        finished.append((sid, live.pop(sid)))
+
+    for _ in range(40):
+        clock.now += 0.004
+        op = int(rng.integers(0, 10))
+        if op < 3 and len(live) < 4:
+            sid = svc.attach()
+            live[sid] = {"rec": recs[int(rng.integers(len(recs)))], "pos": 0}
+            parts[sid] = []
+        elif op < 8 and live:
+            sid = int(rng.choice(sorted(live)))
+            s = live[sid]
+            if s["pos"] < len(s["rec"]):
+                cut = min(s["pos"] + int(rng.integers(1, 1200)), len(s["rec"]))
+                r = s["rec"]
+                _collect(
+                    svc.feed(
+                        sid,
+                        r.x[s["pos"]:cut], r.y[s["pos"]:cut],
+                        r.t[s["pos"]:cut], r.p[s["pos"]:cut],
+                    ),
+                    parts,
+                )
+                s["pos"] = cut
+        elif op < 9:
+            _collect(svc.pump(force=True), parts)
+        elif live:
+            detach(int(rng.choice(sorted(live))))
+    for sid in sorted(live):
+        detach(sid)
+
+    for sid, s in finished:
+        n = s["pos"]
+        if n == 0:
+            assert sum(p.num_windows for p in parts[sid]) == 0
+            continue
+        scan = run_recording_scan(_prefix(s["rec"], n), config)
+        _assert_stream_equals_scan(parts[sid], scan)
+
+
+def test_service_slot_recycling_and_promotion_bookkeeping():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2, 4), clock=FakeClock()
+    )
+    a, b = svc.attach("a"), svc.attach("b")
+    assert svc.capacity == 2 and svc.promotions == 0
+    c = svc.attach("c")  # pool full -> tier promotion
+    assert svc.capacity == 4 and svc.promotions == 1
+    slot_b = svc.session(b).slot
+    svc.detach(b)
+    assert svc.session(b).state == "detached"
+    d = svc.attach("d")  # lowest free slot is b's old one
+    assert svc.session(d).slot == slot_b
+    assert svc.n_sessions == 3
+    # Detached sessions are closed to traffic; unknown sids are errors.
+    with pytest.raises(RuntimeError, match="detached"):
+        svc.feed(b, *_spaced_stream(0, 10))
+    with pytest.raises(KeyError, match="unknown session"):
+        svc.feed(12345, *_spaced_stream(0, 10))
+    for sid in (a, c, d):
+        svc.detach(sid)
+    assert svc.n_sessions == 0
+
+
+# ---------------------------------------------------------------------------
+# Compile discipline.
+# ---------------------------------------------------------------------------
+
+def test_service_churn_compiles_one_fleet_step_per_tier():
+    """Cycling 1 -> 4 sessions over tiers (2, 4) — with detach-and-reattach
+    churn at the end — traces exactly ONE fleet-step compile per capacity
+    tier: slot occupancy is never part of a compiled shape."""
+    from repro.core.pipeline import fleet as fleet_mod
+
+    # A config no other test jits, so the step cache starts cold and
+    # every compile shows up in STEP_TRACES.
+    config = PipelineConfig(
+        batcher=BatcherConfig(size_threshold=100, capacity=128)
+    )
+    svc = DetectionService(
+        config, tiers=(2, 4),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        clock=FakeClock(),
+    )
+    streams = {}
+
+    def feed_round(sids):
+        for sid in sids:
+            x, y, t, p = streams[sid]["data"]
+            pos = streams[sid]["pos"]
+            svc.feed(sid, x[pos:pos + 100], y[pos:pos + 100],
+                     t[pos:pos + 100], p[pos:pos + 100])
+            streams[sid]["pos"] = pos + 100
+        svc.pump(force=True)
+
+    def attach():
+        sid = svc.attach()
+        streams[sid] = {"data": _spaced_stream(seed=50 + sid, n=2000), "pos": 0}
+        return sid
+
+    fleet_mod.STEP_TRACES.clear()
+    live = []
+    for target in (1, 2, 3, 4):  # churn up: 1 -> max sessions
+        while len(live) < target:
+            live.append(attach())
+        feed_round(live)
+    while live:  # churn down: exact-window feeds leave no remainder, so
+        svc.detach(live.pop())  # detach flushes close nothing (no step)
+    live = [attach(), attach()]  # recycled slots at the promoted tier
+    feed_round(live)
+
+    traces = [tr for tr in fleet_mod.STEP_TRACES if tr[2] == 128]
+    assert all(w == 1 for (_, w, _, _) in traces), traces
+    assert all(u is False for (*_, u) in traces), traces
+    per_tier = {}
+    for s, *_ in traces:
+        per_tier[s] = per_tier.get(s, 0) + 1
+    assert per_tier == {2: 1, 4: 1}, traces
+
+
+# ---------------------------------------------------------------------------
+# Admission, validation, accounting.
+# ---------------------------------------------------------------------------
+
+def test_service_admission_micro_batches_sessions():
+    clock = FakeClock()
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=0.02, max_items=300),
+        clock=clock,
+    )
+    s0, s1 = svc.attach(), svc.attach()
+    d0, d1 = _spaced_stream(1, 400), _spaced_stream(2, 400)
+    assert svc.feed(s0, *[a[:150] for a in d0]) == []  # 150 < 300, fresh
+    clock.now += 0.010
+    assert svc.feed(s1, *[a[:100] for a in d1]) == []  # 250 < 300, 10 ms
+    clock.now += 0.011  # oldest chunk is now 21 ms > max_delay
+    served = svc.feed(s0, *[a[150:151] for a in d0])
+    assert {fd.sid for fd in served} == {s0, s1}  # one step served both
+    assert svc.session(s0).stats.steps == 1
+    assert svc.session(s1).stats.steps == 1
+
+
+def test_service_feed_rejects_bad_chunk_atomically():
+    recs = _service_recordings()
+    config = PipelineConfig()
+    svc = DetectionService(config, tiers=(2,), clock=FakeClock())
+    sid = svc.attach()
+    rec = recs[0]
+    bad_t = rec.t[:20][::-1].copy()
+    with pytest.raises(ValueError, match=f"session {sid}"):
+        svc.feed(sid, rec.x[:20], rec.y[:20], bad_t, rec.p[:20])
+    # Nothing was queued — the session (and the fleet) never saw the chunk.
+    assert svc.backlog(sid) == 0
+    assert svc.session(sid).stats.feeds == 0
+    parts = []
+    for chunk in iter_chunks(rec):
+        _collect(svc.feed(sid, *chunk), {sid: parts})
+        _collect(svc.pump(force=True), {sid: parts})
+    parts.append(svc.detach(sid))
+    _assert_stream_equals_scan(parts, run_recording_scan(rec, config))
+
+
+def test_service_monotone_enforced_across_session_feeds():
+    svc = DetectionService(PipelineConfig(), tiers=(2,), clock=FakeClock())
+    sid = svc.attach()
+    x, y, t, p = _spaced_stream(3, 200)
+    svc.feed(sid, x[:100], y[:100], t[:100], p[:100])
+    with pytest.raises(ValueError, match="monotonically non-decreasing"):
+        svc.feed(sid, x[:10], y[:10], t[:10], p[:10])  # regresses in time
+
+
+def test_service_latency_and_backlog_accounting():
+    clock = FakeClock()
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        clock=clock,
+    )
+    sid = svc.attach("cam")
+    x, y, t, p = _spaced_stream(4, 300)
+    svc.feed(sid, x[:50], y[:50], t[:50], p[:50])
+    assert svc.backlog(sid) == 50  # queued service-side
+    clock.now += 0.005
+    served = svc.pump(force=True)
+    assert len(served) == 1 and served[0].latency_ms == pytest.approx(5.0)
+    # 50 events cannot close a window; they sit in the slot's batcher
+    # remainder now — still this session's backlog.
+    assert served[0].result.num_windows == 0
+    assert svc.backlog(sid) == 50
+    stats = svc.session(sid).stats
+    assert stats.feeds == 1 and stats.events == 50 and stats.steps == 1
+    assert stats.latency_percentile(50) == pytest.approx(5.0)
+    svc.detach(sid)
+    assert svc.backlog(sid) == 0  # remainder flushed with the tail
+
+    # Empty chunks are heartbeats: accepted, never queued, never stepped.
+    sid2 = svc.attach()
+    assert svc.feed(sid2, *[np.zeros(0, np.int64)] * 4) == []
+    assert svc.session(sid2).stats.feeds == 0
+    assert svc.pump(force=True) == []
+
+
+def test_service_rejects_bad_tiers():
+    with pytest.raises(ValueError, match="tiers"):
+        DetectionService(PipelineConfig(), tiers=(4, 2))
+    with pytest.raises(ValueError, match="tiers"):
+        DetectionService(PipelineConfig(), tiers=())
+
+
+def test_detach_discards_stale_admission_entries():
+    """A detached session's queued-chunk entries must not keep aging in
+    the admitter — otherwise the next session's first feed fires the time
+    threshold spuriously instead of micro-batching its own window."""
+    clock = FakeClock()
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=0.02, max_items=10_000),
+        clock=clock,
+    )
+    a = svc.attach()
+    svc.feed(a, *_spaced_stream(10, 100))  # queued, admission not fired
+    clock.now += 0.005
+    svc.detach(a)  # consumes the chunk out of band
+    clock.now += 0.05  # a's dead entry would now be 55 ms old
+    b = svc.attach()
+    assert svc.feed(b, *_spaced_stream(11, 50)) == []  # b batches normally
+    assert svc.session(b).stats.steps == 0
+
+
+def test_forget_evicts_detached_records_only():
+    svc = DetectionService(PipelineConfig(), tiers=(2,), clock=FakeClock())
+    a, b = svc.attach("a"), svc.attach("b")
+    svc.detach(a)
+    assert svc.detached_sessions == [a]
+    with pytest.raises(RuntimeError, match="detach first"):
+        svc.forget(b)
+    svc.forget(a)
+    assert svc.detached_sessions == []
+    with pytest.raises(KeyError):
+        svc.session(a)
+    svc.forget(12345)  # unknown sid: no-op
+    svc.detach(b)
+
+
+def test_latency_samples_are_bounded():
+    from repro.serve.sessions import MAX_LATENCY_SAMPLES, SessionStats
+
+    stats = SessionStats()
+    for i in range(MAX_LATENCY_SAMPLES + 100):
+        stats.record_latency(float(i))
+    assert len(stats.latency_ms) == MAX_LATENCY_SAMPLES
+    assert stats.latency_ms[0] == 100.0  # oldest samples dropped
+    assert stats.latency_percentile(100) == float(MAX_LATENCY_SAMPLES + 99)

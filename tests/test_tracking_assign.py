@@ -1,0 +1,177 @@
+"""``tracking._greedy_assign`` edge cases pinned against a numpy oracle:
+cost ties, all-gated rows, and MAX_TRACKS saturation (more confirmed
+clusters than tracker slots)."""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+import jax.numpy as jnp
+
+from repro.core.grid_clustering import Clusters
+from repro.core.tracking import (
+    MAX_TRACKS,
+    TrackerConfig,
+    _greedy_assign,
+    init_tracks,
+    tracker_step,
+)
+
+
+def _greedy_assign_np(cost: np.ndarray, gate: float) -> np.ndarray:
+    """Reference with the scan's exact semantics: rows in track order,
+    ``argmin`` breaking ties toward the lowest detection index, each
+    detection used at most once, unassigned rows -1."""
+    t, k = cost.shape
+    assigned = np.zeros(k, bool)
+    out = np.full(t, -1, np.int32)
+    for ti in range(t):
+        row = np.where(assigned, np.inf, cost[ti])
+        j = int(np.argmin(row))
+        if row[j] <= gate:
+            assigned[j] = True
+            out[ti] = j
+    return out
+
+
+def _assert_matches_oracle(cost: np.ndarray, gate: float):
+    got = np.asarray(_greedy_assign(jnp.asarray(cost, jnp.float32), gate))
+    np.testing.assert_array_equal(got, _greedy_assign_np(cost, gate))
+    # Structural invariants, independent of the oracle.
+    used = got[got >= 0]
+    assert len(np.unique(used)) == len(used)  # each detection at most once
+    for ti, j in enumerate(got):
+        if j >= 0:
+            assert cost[ti, j] <= gate
+
+
+def test_exact_cost_ties_break_toward_lowest_detection_index():
+    # Both tracks see identical costs on detections 1 and 2: track 0 must
+    # take detection 1 (lowest index among the minima), track 1 then takes
+    # detection 2 (its minimum is consumed).
+    cost = np.array([
+        [9.0, 2.0, 2.0, 8.0],
+        [9.0, 2.0, 2.0, 8.0],
+    ])
+    got = np.asarray(_greedy_assign(jnp.asarray(cost, jnp.float32), 10.0))
+    np.testing.assert_array_equal(got, [1, 2])
+    _assert_matches_oracle(cost, 10.0)
+
+
+def test_tied_rows_compete_in_track_order():
+    # One shared best detection: the lower-index track wins it; the loser
+    # falls back to its next-best — taken when inside the gate, -1 when out.
+    cost = np.array([
+        [1.0, 5.0],
+        [1.0, 3.0],
+    ])
+    got = np.asarray(_greedy_assign(jnp.asarray(cost, jnp.float32), 4.0))
+    np.testing.assert_array_equal(got, [0, 1])  # 3.0 <= gate: fallback taken
+    _assert_matches_oracle(cost, 4.0)
+    cost2 = np.array([
+        [1.0, 5.0],
+        [1.0, 5.0],
+    ])
+    got2 = np.asarray(_greedy_assign(jnp.asarray(cost2, jnp.float32), 4.0))
+    np.testing.assert_array_equal(got2, [0, -1])  # 5.0 > gate: loser unmatched
+    _assert_matches_oracle(cost2, 4.0)
+
+
+def test_all_gated_rows_get_minus_one():
+    cost = np.full((3, 2), 100.0)
+    got = np.asarray(_greedy_assign(jnp.asarray(cost, jnp.float32), 24.0))
+    np.testing.assert_array_equal(got, [-1, -1, -1])
+    _assert_matches_oracle(cost, 24.0)
+
+
+def test_all_inf_rows_inactive_tracks_never_assign():
+    # tracker_step masks inactive tracks / invalid detections to inf;
+    # an all-inf row must come out -1, not detection 0.
+    cost = np.full((2, 3), np.inf)
+    cost[1, 1] = 3.0
+    got = np.asarray(_greedy_assign(jnp.asarray(cost, jnp.float32), 24.0))
+    np.testing.assert_array_equal(got, [-1, 1])
+    _assert_matches_oracle(cost, 24.0)
+
+
+def test_exactly_at_gate_is_assigned():
+    cost = np.array([[24.0]])
+    got = np.asarray(_greedy_assign(jnp.asarray(cost, jnp.float32), 24.0))
+    np.testing.assert_array_equal(got, [0])  # gate is inclusive
+    _assert_matches_oracle(cost, 24.0)
+
+
+def test_more_tracks_than_detections_and_vice_versa():
+    _assert_matches_oracle(np.array([[1.0], [2.0], [0.5]]), 10.0)  # T > K
+    _assert_matches_oracle(np.array([[3.0, 1.0, 2.0, 0.1]]), 10.0)  # K > T
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_greedy_assign_matches_numpy_oracle_randomized(seed):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, MAX_TRACKS + 1))
+    k = int(rng.integers(1, 33))
+    # Quantized costs force frequent exact ties; scatter some infs in.
+    cost = rng.integers(0, 6, size=(t, k)).astype(np.float64)
+    cost[rng.random((t, k)) < 0.2] = np.inf
+    _assert_matches_oracle(cost, gate=3.0)
+
+
+def _clusters_at(xs: np.ndarray, ys: np.ndarray, k: int) -> Clusters:
+    n = len(xs)
+    pad = k - n
+    f = lambda a: jnp.asarray(np.pad(np.asarray(a, np.float32), (0, pad)))
+    i = lambda a: jnp.asarray(np.pad(np.asarray(a, np.int32), (0, pad)))
+    valid = jnp.asarray(np.pad(np.ones(n, bool), (0, pad)))
+    zero = np.zeros(n)
+    return Clusters(
+        centroid_x=f(xs), centroid_y=f(ys), centroid_t=f(zero),
+        count=i(np.full(n, 9)), cell_x=i(zero), cell_y=i(zero), valid=valid,
+    )
+
+
+def test_max_tracks_saturation_spawns_lowest_index_detections():
+    """More confirmed clusters than tracker slots: every slot fills, the
+    overflow detections are dropped, and the spawned slots take the
+    detections in index order (rank-pairing is deterministic)."""
+    config = TrackerConfig()
+    k = MAX_TRACKS + 8  # 24 detections into 16 slots
+    xs = 30.0 + 25.0 * np.arange(k)  # > gate apart: no cross-association
+    ys = np.full(k, 50.0)
+    clusters = _clusters_at(xs, ys, k)
+    entropy = jnp.zeros((k,), jnp.float32)
+    state, assign = tracker_step(init_tracks(config), clusters, entropy, config)
+    assert int(state.active.sum()) == MAX_TRACKS  # saturated, not overflowed
+    np.testing.assert_array_equal(np.asarray(assign), np.full(MAX_TRACKS, -1))
+    # Slots take detections 0..MAX_TRACKS-1 in order; the rest are dropped.
+    np.testing.assert_array_equal(
+        np.asarray(state.x), xs[:MAX_TRACKS].astype(np.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(state.hits), np.ones(MAX_TRACKS))
+
+    # A second window at the same spots: every slot associates (all slots
+    # busy), and the 8 unclaimed detections still cannot spawn.
+    state2, assign2 = tracker_step(state, clusters, entropy, config)
+    assert int(state2.active.sum()) == MAX_TRACKS
+    np.testing.assert_array_equal(np.asarray(assign2), np.arange(MAX_TRACKS))
+    np.testing.assert_array_equal(np.asarray(state2.hits), np.full(MAX_TRACKS, 2))
+
+
+def test_saturated_tracker_frees_slot_on_miss_then_respawns():
+    config = TrackerConfig(max_misses=0)  # one miss kills a track
+    k = MAX_TRACKS
+    xs = 30.0 + 25.0 * np.arange(k)
+    ys = np.full(k, 50.0)
+    entropy = jnp.zeros((k,), jnp.float32)
+    state, _ = tracker_step(
+        init_tracks(config), _clusters_at(xs, ys, k), entropy, config
+    )
+    assert int(state.active.sum()) == MAX_TRACKS
+    # Next window: detection 0 vanishes -> slot 0 misses once and dies,
+    # and a brand-new detection far away claims the freed slot.
+    xs2 = np.concatenate([xs[1:], [600.0]])
+    ys2 = np.full(k, 50.0)
+    state2, _ = tracker_step(state, _clusters_at(xs2, ys2, k), entropy, config)
+    assert int(state2.active.sum()) == MAX_TRACKS
+    assert float(state2.x[0]) == pytest.approx(600.0)  # respawned slot
+    assert int(state2.hits[0]) == 1
