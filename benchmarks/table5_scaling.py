@@ -50,10 +50,13 @@ print(f"RESULT,{{ev / dt / 1e6:.3f}},{{dt / windows * 1e3:.3f}}")
 """
 
 
-def bench() -> list[tuple[str, float, str]]:
+def bench(
+    node_counts: tuple[int, ...] = (1, 2, 4, 8)
+) -> list[tuple[str, float, str]]:
+    """One row per node count; smoke callers pass ``node_counts=(1,)``."""
     rows = []
     base = None
-    for nodes in (1, 2, 4, 8):
+    for nodes in node_counts:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nodes}"
         env["PYTHONPATH"] = str(SRC)

@@ -25,6 +25,22 @@ This is the one place the pipeline's tuning knobs are documented
 * ``use_kernels`` — route spatial quantization + cluster accumulation
   through the Pallas ``cluster_accum`` kernel instead of the jnp
   scatter (bit-identical; exercised by ``tests/test_pipeline_scan.py``).
+
+* ``numerics`` — arithmetic datapath for the per-window stage chain:
+
+  - ``"float"`` (default): the float32 golden model described above.
+  - ``"fixed"``: the hardware-faithful integer datapath
+    (``repro.core.fixed_point``) — int32 accumulators everywhere, float
+    only in the per-cluster scalar epilogue, mirroring the paper's
+    fixed-point fabric. Detection scores are bit-identical to the float
+    path where DESIGN.md Sec. 12 claims so, and within documented
+    bounds elsewhere. Under ``numerics="fixed"``, ``metrics_impl``
+    selects ``"event"``/``"staged"`` (staged integer jnp stages, the
+    golden reference) or ``"megakernel"`` (the fused Pallas
+    ``window_pipeline`` kernel: one launch per window batch,
+    bit-identical to the staged fixed path); ``"frame"``/``"kernel"``,
+    ``use_kernels`` and ``merge_neighbors`` are float-path-only and
+    raise ``ValueError``.
 """
 from __future__ import annotations
 
@@ -50,6 +66,7 @@ class PipelineConfig:
     use_kernels: bool = False  # route quantize+accumulate through Pallas
     metrics_impl: str = "event"  # "event" | "frame" | "kernel" (see module doc)
     scan_chunk: int = 8  # event-scan phase block size (scheduling only)
+    numerics: str = "float"  # "float" | "fixed" (see module doc)
 
 
 def _histogram_fn(config: PipelineConfig) -> Callable[[EventBatch], tuple]:

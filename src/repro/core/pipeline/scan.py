@@ -99,11 +99,19 @@ def make_atlas(config: PipelineConfig, capacity: int | None = None) -> jax.Array
 def _make_core(config: PipelineConfig, with_tracking: bool):
     """Build the (un-jitted) step core; jit/vmap wrappers layer on top.
 
-    ``metrics_impl="event"`` routes to the phased event-space driver
-    (:func:`_make_event_core`); "frame" and "kernel" keep the straight
-    per-window scan (the atlas is threaded through untouched so every
-    impl exposes the same carry signature).
+    ``numerics="fixed"`` routes to the integer datapath core
+    (:func:`repro.core.fixed_point._make_fixed_core`, staged or fused
+    megakernel); ``metrics_impl="event"`` routes to the phased
+    event-space driver (:func:`_make_event_core`); "frame" and "kernel"
+    keep the straight per-window scan (the atlas is threaded through
+    untouched so every impl exposes the same carry signature).
     """
+    if config.numerics == "fixed":
+        from repro.core.fixed_point import _make_fixed_core
+
+        return _make_fixed_core(config, with_tracking)
+    if config.numerics != "float":
+        raise ValueError(f"unknown numerics: {config.numerics!r}")
     if config.metrics_impl == "event":
         from repro.core.pipeline.event_core import _make_event_core
 

@@ -65,6 +65,12 @@ def make_process_window(config: PipelineConfig = PipelineConfig()):
     instead of re-tracing — the loop driver's cost is per-window dispatch,
     not retracing.
     """
+    if config.numerics == "fixed":
+        from repro.core.fixed_point import make_fixed_process_window
+
+        return make_fixed_process_window(config)
+    if config.numerics != "float":
+        raise ValueError(f"unknown numerics: {config.numerics!r}")
     hist_fn = _histogram_fn(config)
     metrics_fn = _metrics_fn(config)
 

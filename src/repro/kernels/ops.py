@@ -16,6 +16,7 @@ from repro.kernels import cluster_accum as _ca
 from repro.kernels import grid_quantize as _gq
 from repro.kernels import patch_metrics as _pm
 from repro.kernels import window_entropy as _we
+from repro.kernels import window_pipeline as _wp
 
 
 def _default_interpret() -> bool:
@@ -141,6 +142,87 @@ def patch_metrics_call(
         interpret=interpret,
     )
     return {name: out[:, i] for i, name in enumerate(M.METRIC_NAMES)}
+
+
+def window_pipeline_call(
+    stacked,
+    config,
+    *,
+    window: int | None = None,
+    bins: int | None = None,
+    interpret: bool | None = None,
+):
+    """Trace-time fused per-window fixed-point pipeline (the megakernel).
+
+    ``stacked`` is an EventBatch with (W, E) leaves (a window batch, as
+    produced by ``pad_windows``); ``config`` a PipelineConfig. ONE kernel
+    launch covers conditioning, clustering, and metrics for every window
+    in the batch — versus two interpret-mode launches *per window* on the
+    staged kernel path (``use_kernels`` + ``metrics_impl="kernel"``).
+    The kernel covers the integer datapath; the float metric epilogue is
+    the SAME vmapped ``fixed_point.fixed_metric_epilogue`` the staged
+    path runs, applied here to the kernel's integer surfaces — that
+    shared final stage is what makes fused-vs-staged bit-identity
+    structural. Like the other ``*_call`` entry points this is safe
+    inside an enclosing jit. Returns ``(FixedClusters, metrics)`` with
+    (W, K) leaves; metrics keyed by ``repro.core.metrics.METRIC_NAMES``.
+    """
+    from functools import partial as _partial
+
+    from repro.core import metrics as M
+    from repro.core.fixed_point import FixedClusters, fixed_metric_epilogue
+
+    interpret = _default_interpret() if interpret is None else interpret
+    window = M.WINDOW if window is None else window
+    bins = M.HIST_BINS if bins is None else bins
+    e = stacked.x.shape[-1]
+    e_pad = -(-e // _wp.LANE) * _wp.LANE
+
+    def pad_ev(a, fill=0):
+        if e_pad == e:
+            return a
+        pad_width = [(0, 0)] * (a.ndim - 1) + [(0, e_pad - e)]
+        return jnp.pad(a, pad_width, constant_values=fill)
+
+    grid = config.grid
+    k = grid.max_clusters
+    cl, surf = _wp.window_pipeline(
+        pad_ev(stacked.x.astype(jnp.int32)),
+        pad_ev(stacked.y.astype(jnp.int32)),
+        pad_ev(stacked.t.astype(jnp.int32)),
+        pad_ev(stacked.valid.astype(jnp.int32)),
+        roi=tuple(config.roi),
+        hot_pixel_max=config.hot_pixel_max,
+        cell_size=grid.cell_size,
+        grid_w=grid.grid_w,
+        grid_h=grid.grid_h,
+        min_events=grid.min_events,
+        k=k,
+        width=grid.width,
+        height=grid.height,
+        window=window,
+        bins=bins,
+        interpret=interpret,
+    )
+    rows = {f: cl[..., r, :k] for r, f in enumerate(_wp.CL_FIELDS)}
+    fc = FixedClusters(
+        cq_x=rows["cq_x"], cq_y=rows["cq_y"], cq_t=rows["cq_t"],
+        count=rows["count"], cell_x=rows["cell_x"], cell_y=rows["cell_y"],
+        x0=rows["x0"], y0=rows["y0"], valid=rows["valid"] != 0,
+    )
+    norm = rows["norm"][..., :1]  # (W, 1); every lane carries the value
+    hist = surf[..., :bins]
+    s1, s2, s_g, s_e2, edges = (
+        surf[..., bins + i] for i in range(len(_wp.SURF_FIELDS))
+    )
+    epi = jax.vmap(_partial(fixed_metric_epilogue, n=window * window))
+    for _ in range(stacked.x.ndim - 1):
+        epi = jax.vmap(epi)
+    mets = epi(
+        hist, s1, s2, s_g, s_e2, edges, fc.count, fc.valid,
+        jnp.broadcast_to(norm, fc.count.shape),
+    )
+    return fc, mets
 
 
 @partial(jax.jit, static_argnames=("window", "bins", "interpret"))

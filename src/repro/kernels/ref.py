@@ -52,6 +52,25 @@ def cluster_accum_ref(
     return count, sum_x, sum_y, sum_t
 
 
+def window_pipeline_ref(stacked, config):
+    """Oracle for kernels.window_pipeline: the staged fixed-point path
+    scanned over the window axis.
+
+    ``stacked`` is an EventBatch with (W, E) leaves; returns
+    ``(FixedClusters, metrics)`` with (W, K) leaves — the identical
+    contract as ``ops.window_pipeline_call``, via one jnp stage at a
+    time instead of the fused kernel.
+    """
+    from repro.core.fixed_point import fixed_window_stage
+
+    def step(carry, batch):
+        fc, mets = fixed_window_stage(config, batch)
+        return carry, (fc, mets)
+
+    _, (fc, mets) = jax.lax.scan(step, 0, stacked)
+    return fc, mets
+
+
 def window_entropy_ref(
     frame: jax.Array,
     cx: jax.Array,

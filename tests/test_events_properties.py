@@ -1,0 +1,116 @@
+"""Property-based tests for the stream merge point (ISSUE 6 satellite).
+
+``validate_monotone`` / ``monotone_merge`` guard every streaming driver:
+a chunk must be internally non-decreasing and must not start before the
+stream's newest absorbed timestamp, or the dual-threshold batcher would
+silently mis-window events. These properties sweep randomized chunk
+splits of a sorted stream (always accepted, merge == concatenation),
+equal-timestamp runs (ties are legal everywhere), empty chunks, and
+randomized corruptions (always rejected, pending buffer untouched),
+against plain numpy oracles.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core.events import monotone_merge, validate_monotone
+
+
+def _sorted_stream(rng, n, tie_heavy=False):
+    # tie_heavy draws from a tiny alphabet so long equal-t runs appear.
+    steps = rng.integers(0, 3 if tie_heavy else 50, n)
+    t = np.cumsum(steps) + int(rng.integers(0, 1000))
+    x = rng.integers(0, 640, n)
+    y = rng.integers(0, 480, n)
+    p = rng.integers(0, 2, n)
+    return x, y, t, p
+
+
+def _split(rng, n, n_chunks):
+    """Random split of range(n) into n_chunks contiguous (possibly empty)
+    chunks."""
+    cuts = np.sort(rng.integers(0, n + 1, n_chunks - 1))
+    return np.split(np.arange(n), cuts)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 300), st.integers(1, 8))
+def test_merge_of_sorted_splits_reassembles_stream(seed, n, n_chunks):
+    rng = np.random.default_rng(seed)
+    x, y, t, p = _sorted_stream(rng, n, tie_heavy=bool(seed % 2))
+    pending = tuple(np.empty(0, np.int64) for _ in range(4))
+    last_t = None
+    for idx in _split(rng, n, n_chunks):
+        pending = monotone_merge(pending, x[idx], y[idx], t[idx], p[idx], last_t)
+        if len(idx):
+            last_t = int(t[idx[-1]])
+    for got, want in zip(pending, (x, y, t, p)):
+        np.testing.assert_array_equal(got, want.astype(np.int64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 200))
+def test_out_of_order_chunk_rejected_and_pending_untouched(seed, n):
+    rng = np.random.default_rng(seed)
+    x, y, t, p = _sorted_stream(rng, n)
+    # Corrupt one interior position so t is strictly decreasing there.
+    i = int(rng.integers(1, n))
+    t = t.copy()
+    t[i] = t[i - 1] - 1 - int(rng.integers(0, 100))
+    assert np.any(t[1:] < t[:-1])  # numpy oracle agrees it's unsorted
+    pending = tuple(np.arange(3, dtype=np.int64) for _ in range(4))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        monotone_merge(pending, x, y, t, p)
+    for buf in pending:  # no partial absorption
+        np.testing.assert_array_equal(buf, np.arange(3))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 200), st.integers(1, 500))
+def test_chunk_before_last_t_rejected(seed, n, gap):
+    rng = np.random.default_rng(seed)
+    x, y, t, p = _sorted_stream(rng, n)
+    last_t = int(t[0]) + gap
+    if int(t[0]) >= last_t:
+        return
+    pending = tuple(np.empty(0, np.int64) for _ in range(4))
+    with pytest.raises(ValueError, match="before the"):
+        monotone_merge(pending, x, y, t, p, last_t)
+
+
+def test_empty_chunk_always_accepted():
+    empty = np.empty(0, np.int64)
+    validate_monotone(empty)  # no last_t
+    validate_monotone(empty, last_t=10**9)  # empty can't precede anything
+    pending = tuple(np.arange(5, dtype=np.int64) for _ in range(4))
+    merged = monotone_merge(pending, empty, empty, empty, empty, last_t=123)
+    for got, want in zip(merged, pending):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_equal_timestamp_runs_accepted_across_boundaries():
+    # A run of identical timestamps may straddle a chunk boundary: the
+    # next chunk starts AT last_t, which is legal (non-decreasing).
+    t = np.full(10, 42, np.int64)
+    validate_monotone(t, last_t=42)
+    pending = tuple(np.empty(0, np.int64) for _ in range(4))
+    z = np.zeros(10, np.int64)
+    merged = monotone_merge(pending, z, z, t, z, last_t=42)
+    np.testing.assert_array_equal(merged[2], t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 300))
+def test_validate_matches_numpy_oracle(seed, n):
+    # validate_monotone accepts iff numpy says sorted AND t[0] >= last_t.
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, 60, n).astype(np.int64)  # usually unsorted
+    if seed % 3 == 0:
+        t = np.sort(t)
+    last_t = int(rng.integers(0, 60))
+    ok = bool(np.all(t[1:] >= t[:-1])) and int(t[0]) >= last_t
+    if ok:
+        validate_monotone(t, last_t)
+    else:
+        with pytest.raises(ValueError):
+            validate_monotone(t, last_t)

@@ -1,0 +1,210 @@
+"""Edge-shape differential suite for the Pallas kernels (ISSUE 6
+satellite).
+
+``tests/test_kernels.py`` sweeps nominal shapes; this file pins the
+degenerate windows a live sensor actually produces, kernel vs
+``kernels/ref.py`` (or the metrics oracle) on every one:
+
+* zero-event (all-invalid) windows,
+* single-event windows,
+* capacity-saturated windows (every slot valid, heavy coincidences),
+* all-invalid PADDING carrying garbage/out-of-bounds coordinates that
+  must never leak into a cell, patch, or metric.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.events import batch_from_arrays
+from repro.core.grid_clustering import GridConfig, grid_cluster
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0xED6E)
+
+
+# ---------------------------------------------------------------------------
+# grid_quantize: single word, tile-boundary sizes, max coordinates.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 1023, 1024, 1025])
+def test_grid_quantize_tile_boundaries(n):
+    x = RNG.integers(0, 640, n).astype(np.uint32)
+    y = RNG.integers(0, 480, n).astype(np.uint32)
+    words = jnp.asarray((y << 16) | x)
+    np.testing.assert_array_equal(
+        np.asarray(ops.grid_quantize_packed(words, 16)),
+        np.asarray(ref.grid_quantize_packed_ref(words, 16)),
+    )
+
+
+def test_grid_quantize_extreme_coordinates():
+    # Full 16-bit coordinate range: no overflow into the other half-word.
+    words = jnp.asarray(
+        [0, 0xFFFF, 0xFFFF_0000, 0xFFFF_FFFF, (479 << 16) | 639], jnp.uint32
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.grid_quantize_packed(words, 16)),
+        np.asarray(ref.grid_quantize_packed_ref(words, 16)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cluster_accum: zero-event / single-event / saturated / garbage padding.
+# ---------------------------------------------------------------------------
+
+def _accum_case(x, y, t, v):
+    args = (
+        jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32),
+        jnp.asarray(t, jnp.float32), jnp.asarray(v, bool),
+    )
+    kw = dict(cell_size=16, grid_w=40, grid_h=30)
+    out = ops.cluster_accum(*args, **kw)
+    exp = ref.cluster_accum_ref(*args, **kw)
+    for a, b, name in zip(out, exp, ("count", "sx", "sy", "st")):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-3, err_msg=name
+        )
+    return out
+
+
+def test_cluster_accum_zero_event_window():
+    n = 256
+    out = _accum_case(
+        RNG.integers(0, 640, n), RNG.integers(0, 480, n),
+        np.zeros(n), np.zeros(n, bool),
+    )
+    for surf in out:
+        assert float(np.abs(np.asarray(surf)).max()) == 0.0
+
+
+def test_cluster_accum_single_event_window():
+    count, sx, sy, st = _accum_case(
+        np.array([321]), np.array([234]), np.array([77.0]), np.array([True])
+    )
+    flat = (234 // 16) * 40 + (321 // 16)
+    count = np.asarray(count)
+    assert count.sum() == 1 and count[flat] == 1
+    assert float(np.asarray(sx)[flat]) == 321.0
+    assert float(np.asarray(st)[flat]) == 77.0
+
+
+def test_cluster_accum_saturated_one_cell():
+    # Every event valid and landing in ONE cell: the accumulator sees the
+    # full capacity worth of adds without loss.
+    n = 1024
+    x = 320 + RNG.integers(0, 16, n)
+    y = 240 + RNG.integers(0, 16, n)
+    count, *_ = _accum_case(x, y, np.ones(n), np.ones(n, bool))
+    count = np.asarray(count)
+    assert count.sum() == n
+    assert count.max() == n  # all in the (320//16, 240//16) cell
+
+
+def test_cluster_accum_garbage_padding_masked():
+    # Invalid slots carry hostile coordinates (negative, beyond-sensor):
+    # they must not scatter anywhere, matching the ref's masking.
+    n = 128
+    x = np.concatenate([200 + RNG.integers(0, 10, n // 2),
+                        RNG.integers(-5000, 5000, n // 2)])
+    y = np.concatenate([100 + RNG.integers(0, 10, n // 2),
+                        RNG.integers(-5000, 5000, n // 2)])
+    v = np.concatenate([np.ones(n // 2, bool), np.zeros(n // 2, bool)])
+    count, *_ = _accum_case(x, y, np.ones(n), v)
+    assert int(np.asarray(count).sum()) == n // 2
+
+
+# ---------------------------------------------------------------------------
+# window_entropy: corner-clipped centers, single hot pixel, empty frame.
+# ---------------------------------------------------------------------------
+
+def test_window_entropy_corner_centers():
+    frame = jnp.asarray(RNG.random((480, 640)), jnp.float32)
+    cx = jnp.asarray([0, 639, 0, 639, 320], jnp.int32)
+    cy = jnp.asarray([0, 0, 479, 479, 240], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ops.window_entropy(frame, cx, cy)),
+        np.asarray(ref.window_entropy_ref(frame, cx, cy)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_window_entropy_single_hot_pixel():
+    frame = jnp.zeros((480, 640), jnp.float32).at[240, 320].set(1.0)
+    cx = jnp.asarray([320], jnp.int32)
+    cy = jnp.asarray([240], jnp.int32)
+    out = np.asarray(ops.window_entropy(frame, cx, cy))
+    exp = np.asarray(ref.window_entropy_ref(frame, cx, cy))
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-5)
+    assert out[0, 0] > 0.0  # one bright pixel -> nonzero shannon
+
+
+def test_window_entropy_empty_frame_all_corners():
+    frame = jnp.zeros((480, 640), jnp.float32)
+    cx = jnp.asarray([0, 639], jnp.int32)
+    cy = jnp.asarray([479, 0], jnp.int32)
+    out = np.asarray(ops.window_entropy(frame, cx, cy))
+    np.testing.assert_allclose(out[0], 0.0, atol=1e-5)  # shannon
+    np.testing.assert_allclose(out[2], 0.0, atol=1e-6)  # contrast
+
+
+# ---------------------------------------------------------------------------
+# patch_metrics: degenerate windows vs the event-space oracle.
+# ---------------------------------------------------------------------------
+
+def _metrics_case(batch, grid=GridConfig(min_events=1)):
+    clusters = grid_cluster(batch, grid)
+    out = jax.jit(
+        lambda b, c: ops.patch_metrics_call(b, c, width=640, height=480)
+    )(batch, clusters)
+    exp = M.cluster_metrics_events(batch, clusters)
+    for k in M.METRIC_NAMES:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(exp[k]),
+            rtol=1e-5, atol=1e-5, err_msg=k,
+        )
+    return clusters, out
+
+
+def test_patch_metrics_single_event_window():
+    batch = batch_from_arrays(
+        np.array([300]), np.array([200]), np.array([5]), np.array([1]), 128
+    )
+    clusters, out = _metrics_case(batch)
+    valid = np.asarray(clusters.valid)
+    assert valid.sum() == 1
+    np.testing.assert_allclose(
+        np.asarray(out["event_count"])[valid], [1.0], atol=0
+    )
+
+
+def test_patch_metrics_capacity_saturated_window():
+    n = 256
+    x = 100 + RNG.integers(0, 20, n)
+    y = 100 + RNG.integers(0, 20, n)
+    batch = batch_from_arrays(x, y, np.arange(n), np.zeros(n), n)
+    assert bool(np.asarray(batch.valid).all())
+    _metrics_case(batch, GridConfig(min_events=2))
+
+
+def test_patch_metrics_padding_coordinates_do_not_leak():
+    # Two identical windows except the invalid tail's coordinates: one
+    # zeroed, one garbage landing INSIDE the live patch. Metrics must
+    # be bit-identical — padding never reaches a patch or histogram.
+    n, cap = 90, 256
+    x = 200 + RNG.integers(0, 12, n)
+    y = 300 + RNG.integers(0, 12, n)
+    clean = batch_from_arrays(x, y, np.arange(n), np.zeros(n), cap)
+    gx = np.concatenate([x, 200 + RNG.integers(0, 12, cap - n)])
+    gy = np.concatenate([y, 300 + RNG.integers(0, 12, cap - n)])
+    dirty = clean._replace(
+        x=jnp.asarray(gx, jnp.int32), y=jnp.asarray(gy, jnp.int32)
+    )
+    clusters = grid_cluster(clean, GridConfig(min_events=2))
+    out_c = ops.patch_metrics_call(clean, clusters, width=640, height=480)
+    out_d = ops.patch_metrics_call(dirty, clusters, width=640, height=480)
+    for k in M.METRIC_NAMES:
+        np.testing.assert_array_equal(
+            np.asarray(out_c[k]), np.asarray(out_d[k]), err_msg=k
+        )
