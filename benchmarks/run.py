@@ -50,6 +50,7 @@ BENCHES = {
     "stream": ("stream_latency.py", "BENCH_stream.json"),
     "fleet": ("fleet_throughput.py", "BENCH_fleet.json"),
     "serve": ("serve_latency.py", "BENCH_serve.json"),
+    "chaos": ("chaos_soak.py", "BENCH_chaos.json"),
 }
 
 

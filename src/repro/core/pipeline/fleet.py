@@ -79,6 +79,7 @@ from repro.distributed.sharding import (
     grow_fleet_carry,
     hint_fleet,
     shard_fleet_carry,
+    shrink_fleet_carry,
 )
 
 _EMPTY = np.zeros(0, np.int64)
@@ -454,6 +455,44 @@ class FleetPipeline:
         ]
         self.n_sensors = new_capacity
         self.state = FleetState(cursors=cursors, atlas=atlas, tracks=tracks)
+
+    def shrink(self, new_capacity: int, occupied=()) -> None:
+        """Demote the pool to ``new_capacity`` slots, migrating the carry.
+
+        The inverse of :meth:`grow`, for reclaiming capacity after
+        evictions: the dropped tail slots must all be free (every slot in
+        ``occupied`` must be ``< new_capacity``), so surviving slots keep
+        their state verbatim — slicing the leading sensor dim cannot
+        perturb them, exactly as zero-padding cannot in :meth:`grow`.
+        Any unflushed remainder on a dropped slot is discarded (callers
+        flush or reset departing slots first). Compiles nothing by
+        itself; the next feed compiles the step at the new capacity,
+        which is a shape already warmed if this tier was visited on the
+        way up.
+        """
+        if new_capacity < 1:
+            raise ValueError(f"need at least one slot, got {new_capacity}")
+        if new_capacity > self.n_sensors:
+            raise ValueError(
+                f"cannot shrink pool from {self.n_sensors} to {new_capacity} "
+                "slots; use grow"
+            )
+        high = [s for s in occupied if s >= new_capacity]
+        if high:
+            raise ValueError(
+                f"occupied slots {sorted(high)} do not fit a "
+                f"{new_capacity}-slot pool; migrate or evict them first"
+            )
+        if new_capacity == self.n_sensors:
+            return
+        st = self.state
+        atlas, tracks = shrink_fleet_carry(
+            (st.atlas, st.tracks), new_capacity, self.mesh
+        )
+        self.n_sensors = new_capacity
+        self.state = FleetState(
+            cursors=st.cursors[:new_capacity], atlas=atlas, tracks=tracks
+        )
 
     def _ingest(self, chunks, final) -> FleetResult:
         st = self.state

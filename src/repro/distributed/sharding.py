@@ -229,6 +229,30 @@ def grow_fleet_carry(tree: Any, new_size: int, mesh: Mesh | None) -> Any:
     return shard_fleet_carry(jax.tree.map(pad, tree), mesh)
 
 
+def shrink_fleet_carry(tree: Any, new_size: int, mesh: Mesh | None) -> Any:
+    """Migrate a stacked fleet carry into a *smaller* slot pool.
+
+    The inverse of :func:`grow_fleet_carry`, for capacity-tier demotion
+    after evictions shrink the live set: every leaf keeps its first
+    ``new_size`` slots verbatim (the caller guarantees the dropped tail
+    slots are free, i.e. already zeroed) and the sliced pytree is
+    re-placed with :func:`shard_fleet_carry` so the demoted carry keeps
+    sharding over the ``sensor`` axis.
+    """
+    if new_size < 1:
+        raise ValueError(f"need at least one slot, got {new_size}")
+
+    def cut(leaf):
+        if leaf.shape[0] < new_size:
+            raise ValueError(
+                f"fleet carry has {leaf.shape[0]} slots, cannot take "
+                f"{new_size}"
+            )
+        return leaf[:new_size]
+
+    return shard_fleet_carry(jax.tree.map(cut, tree), mesh)
+
+
 def hint_fleet(tree: Any) -> Any:
     """Sensor-axis sharding hint over every leaf of a stacked fleet pytree
     (identity without an active mesh; see :func:`hint`)."""

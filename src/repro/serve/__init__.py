@@ -1,17 +1,33 @@
-"""Layered serving stack (DESIGN.md Sec. 11).
+"""Layered serving stack (DESIGN.md Secs. 11, 13).
 
 * ``batcher``  — the paper's dual-threshold admission policy as a
   generic, fake-clock-testable primitive.
 * ``sessions`` — per-sensor session lifecycle (attach / feed / detach,
-  monotone-timestamp enforcement, latency + backlog accounting).
+  monotone-timestamp enforcement, bounded queues with shed accounting,
+  latency + backlog accounting, structured fault records).
+* ``faults``   — :class:`FaultConfig` degraded-mode policy + the
+  session-keyed heartbeat/straggler adapter.
 * ``service``  — :class:`DetectionService`: micro-batched detection
-  serving over the slot-pooled fleet engine.
+  serving over the slot-pooled fleet engine, with per-session fault
+  isolation (quarantine, heartbeat eviction, degraded rounds).
+* ``chaos``    — deterministic seeded fault-injection harness pinning
+  the isolation and bit-identity guarantees.
 * ``lm``       — the batched LM engine, a thin client of the shared
   batcher (``repro.serve.engine`` remains as a shim).
 """
 from repro.serve.batcher import (  # noqa: F401
     AdmissionConfig,
     DualThresholdAdmitter,
+)
+from repro.serve.chaos import (  # noqa: F401
+    FAULT_TAXONOMY,
+    ChaosConfig,
+    ChaosHarness,
+    ChaosReport,
+)
+from repro.serve.faults import (  # noqa: F401
+    FaultConfig,
+    SessionHealth,
 )
 from repro.serve.lm import (  # noqa: F401
     DualThresholdBatcher,
@@ -21,6 +37,7 @@ from repro.serve.lm import (  # noqa: F401
 )
 from repro.serve.sessions import (  # noqa: F401
     SensorSession,
+    SessionError,
     SessionStats,
 )
 from repro.serve.service import (  # noqa: F401

@@ -22,6 +22,7 @@ with a fake clock and composes with any event loop.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from typing import Any, Callable, Generic, TypeVar
@@ -121,6 +122,32 @@ class DualThresholdAdmitter(Generic[T]):
             )
             self._queue = keep
         return dropped
+
+    def restate(self, item: T, weight: int) -> None:
+        """Replace every queued entry for ``item`` with ONE entry of the
+        given weight, keeping the oldest of their arrival stamps.
+
+        For producers whose queued weight changed out of band — e.g. a
+        detection session whose queue budget shed events: the stale
+        entries would keep firing the size threshold for weight that no
+        longer exists. ``weight == 0`` just clears the item's entries
+        (:meth:`discard`); with no prior entries the new one is stamped
+        now. The replacement entry is inserted in arrival order, so the
+        prefix-pop rule and ``oldest_age_s`` stay exact.
+        """
+        if weight < 0:
+            raise ValueError(f"weight must be >= 0, got {weight}")
+        arrivals = [e.arrival_s for e in self._queue if e.item == item]
+        self.discard(item)
+        if weight == 0:
+            return
+        arrival = min(arrivals) if arrivals else self.clock()
+        entry = _Entry(arrival, item, weight)
+        ix = bisect.bisect_right(
+            [e.arrival_s for e in self._queue], arrival
+        )
+        self._queue.insert(ix, entry)
+        self._weight += weight
 
     def ready(self) -> bool:
         if not self._queue:

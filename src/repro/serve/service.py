@@ -1,6 +1,6 @@
 """DetectionService: dynamic sensor sessions over the slot-pooled fleet.
 
-The serving-shaped top of the detection stack (DESIGN.md Sec. 11).
+The serving-shaped top of the detection stack (DESIGN.md Secs. 11, 13).
 Sensors attach and detach at will; every attached session feeds raw
 event chunks at its own cadence; the service micro-batches the queued
 chunks under the paper's dual-threshold admission policy
@@ -16,6 +16,15 @@ Contracts:
   interleaving of attach / feed / idle / detach across sessions,
   including slot recycling and capacity-tier promotion mid-stream.
   Pinned by tests/test_serve_service.py.
+* **Fault isolation.** Faults on one sensor never perturb another:
+  with :class:`~repro.serve.faults.FaultConfig` degraded modes enabled,
+  a corrupt chunk quarantines only the offending session, a silent
+  sensor is evicted by heartbeat deadline (slot flushed + recycled), an
+  overloaded session sheds by its own queue budget, and a failed fleet
+  step retries with backoff before the round is marked degraded with
+  every taken chunk restored — healthy sessions' outputs stay
+  bit-identical to a fault-free run throughout (the chaos harness in
+  :mod:`repro.serve.chaos` pins this).
 * **Compile discipline.** Slot occupancy never appears in a compiled
   shape: the fleet step is compiled per (pool capacity, windows-per-feed)
   only, so attach/detach churn costs zero compiles and a churn workload
@@ -23,9 +32,13 @@ Contracts:
   capacity tier (the service pins ``uniform_fast_path=False`` so the
   static uniform variant cannot double that).
 * **Atomic validation.** A chunk that is out of order — within itself
-  or against its session's stream — raises ``ValueError`` at the
-  ``feed`` call, before it is queued: no other session's state, and not
-  even the offending session's state, is touched.
+  or against its session's stream — or carries int32-unsafe garbage
+  coordinates is refused at the ``feed`` call, before it is queued: no
+  other session's state is touched. Under the strict default it raises
+  ``ValueError`` (not even the offending session's state changes);
+  under ``on_validation_error="quarantine"`` the offending session —
+  and only it — is quarantined with a structured error record and its
+  slot recycled.
 """
 from __future__ import annotations
 
@@ -40,7 +53,15 @@ from repro.core.pipeline.config import PipelineConfig
 from repro.core.pipeline.fleet import DEFAULT_TIERS, FleetPipeline, tier_capacity
 from repro.core.pipeline.scan import ScanResult
 from repro.serve.batcher import AdmissionConfig, DualThresholdAdmitter
-from repro.serve.sessions import DETACHED, LIVE, SensorSession
+from repro.serve.faults import FaultConfig, SessionHealth
+from repro.serve.sessions import (
+    DETACHED,
+    EVICTED,
+    LIVE,
+    QUARANTINED,
+    SensorSession,
+    SessionError,
+)
 
 
 @dataclasses.dataclass
@@ -68,6 +89,13 @@ class DetectionService:
     list carries every session's results from that step, not just the
     caller's. ``pump(force=True)`` steps unconditionally (deterministic
     drivers, tests, drain-before-shutdown).
+
+    ``faults`` selects the degraded modes (DESIGN.md Sec. 13): the
+    default :class:`FaultConfig` is the strict contract above; a
+    fault-tolerant deployment passes quarantine / queue budgets /
+    heartbeat eviction / step-retry policies explicitly. ``sleep`` is
+    the retry-backoff sleeper (injectable so tests and the chaos
+    harness never really sleep).
     """
 
     def __init__(
@@ -75,18 +103,23 @@ class DetectionService:
         config: PipelineConfig = PipelineConfig(),
         tiers: tuple[int, ...] = DEFAULT_TIERS,
         admission: AdmissionConfig = AdmissionConfig(),
+        faults: FaultConfig = FaultConfig(),
         with_tracking: bool = True,
         mesh=None,
         clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         if not tiers or list(tiers) != sorted(set(tiers)):
             raise ValueError(f"tiers must be strictly increasing, got {tiers}")
         self.config = config
         self.tiers = tuple(int(t) for t in tiers)
+        self.faults = faults
         self.clock = clock
+        self._sleep = sleep
         self._admit: DualThresholdAdmitter[int] = DualThresholdAdmitter(
             admission, clock
         )
+        self._health = SessionHealth(faults, clock)
         self._fleet = FleetPipeline(
             config,
             n_sensors=self.tiers[0],
@@ -94,11 +127,17 @@ class DetectionService:
             mesh=mesh,
             uniform_fast_path=False,  # compile discipline (module docstring)
         )
-        self._sessions: dict[int, SensorSession] = {}  # all, live + detached
+        self._sessions: dict[int, SensorSession] = {}  # all states
         self._by_slot: dict[int, int] = {}  # slot -> sid, live only
         self._free: list[int] = list(range(self.tiers[0]))  # sorted
         self._next_sid = 0
         self.promotions = 0  # capacity-tier promotions performed
+        self.demotions = 0  # capacity-tier demotions performed
+        self.quarantines = 0  # sessions quarantined (validation faults)
+        self.evictions = 0  # sessions evicted (heartbeat deadline)
+        self.degraded_rounds = 0  # fleet rounds failed + restored
+        self.step_retries = 0  # fleet step retries performed
+        self.errors: list[SessionError] = []  # service-wide fault log
 
     # ------------------------------------------------------------------
     # Introspection.
@@ -115,7 +154,7 @@ class DetectionService:
         return len(self._by_slot)
 
     def session(self, sid: int) -> SensorSession:
-        """Session record (live or detached) — stats, slot, state."""
+        """Session record (any state) — stats, slot, errors."""
         return self._sessions[sid]
 
     def backlog(self, sid: int) -> int:
@@ -126,6 +165,29 @@ class DetectionService:
         if sess.state == LIVE:
             queued += self._fleet.state.cursors[sess.slot].pending_count
         return queued
+
+    def _sids_in(self, state: str) -> list[int]:
+        return [sid for sid, s in self._sessions.items() if s.state == state]
+
+    @property
+    def detached_sessions(self) -> list[int]:
+        """Sids of retained detached-session records (see :meth:`forget`)."""
+        return self._sids_in(DETACHED)
+
+    @property
+    def quarantined_sessions(self) -> list[int]:
+        """Sids quarantined by validation faults (records retained)."""
+        return self._sids_in(QUARANTINED)
+
+    @property
+    def evicted_sessions(self) -> list[int]:
+        """Sids evicted by heartbeat deadline (records retained)."""
+        return self._sids_in(EVICTED)
+
+    def stragglers(self) -> list[int]:
+        """Live sids whose service-latency EMA exceeds the straggler
+        threshold (flagged, not evicted — see FaultConfig)."""
+        return [s for s in self._health.stragglers() if s in self._by_slot.values()]
 
     # ------------------------------------------------------------------
     # Lifecycle.
@@ -153,26 +215,51 @@ class DetectionService:
             slot=slot,
             name=name or f"session-{sid}",
             clock=self.clock,
+            queue_budget=self.faults.queue_budget_events,
+            shed_policy=self.faults.shed_policy,
         )
         self._by_slot[slot] = sid
+        self._health.register(sid)
         return sid
 
     def feed(self, sid: int, x, y, t, p) -> list[ServedFeed]:
         """Queue one raw event chunk for ``sid``; step the fleet if the
         admission policy fires. Returns the feeds completed by this call
         (every admitted session's, not just ``sid``'s) — ``[]`` while
-        the micro-batch is still filling."""
+        the micro-batch is still filling.
+
+        Any feed — including an empty chunk — is a heartbeat. A chunk
+        failing validation raises ``ValueError`` under the strict
+        default, or quarantines ``sid`` (only) under
+        ``on_validation_error="quarantine"``.
+        """
         sess = self._live(sid)
-        n = sess.accept(x, y, t, p)
-        if n:
+        self._health.beat(sid)
+        shed_before = sess.stats.shed_events
+        try:
+            n = sess.accept(x, y, t, p)
+        except ValueError as e:
+            if self.faults.on_validation_error == "raise":
+                raise
+            self._quarantine(sess, str(e))
+            return []
+        if sess.stats.shed_events != shed_before:
+            # The budget shed events (possibly previously submitted ones);
+            # re-state this session's admitter weight exactly.
+            self._admit.restate(sid, sess.queued_events)
+        elif n:
             self._admit.submit(sid, weight=n)
-        if self._admit.ready():
+        self._sweep_liveness()
+        if sess.state == LIVE and self._admit.ready():
             return self.pump(force=True)
         return []
 
     def pump(self, force: bool = False) -> list[ServedFeed]:
         """Run one fleet step over every queued chunk (if admission fired
-        or ``force``). Results are delivered per session, slot-ordered."""
+        or ``force``). Results are delivered per session, slot-ordered.
+        Sweeps heartbeat eviction first; a degraded round (step failed
+        after retries) returns ``[]`` with every chunk restored."""
+        self._sweep_liveness()
         if not force and not self._admit.ready():
             return []
         self._admit.pop_all()
@@ -183,41 +270,106 @@ class DetectionService:
         ]
         if not dirty:
             return []
-        return self._step({slot: sid for slot, sid in dirty}, final_slots=())
+        out = self._step({slot: sid for slot, sid in dirty}, final_slots=())
+        return [] if out is None else out
 
     def detach(self, sid: int) -> ScanResult:
         """Close a session: its queued chunks and trailing partial window
         are processed in one final fleet step (other sessions' queues are
         untouched), the slot carry is zeroed and recycled, and the tail
-        result is returned. The session object stays readable for stats."""
+        result is returned. The session object stays readable for stats.
+
+        If the final step degrades (fails past its retries), the chunks
+        are restored and ``RuntimeError`` is raised — the session stays
+        live and the detach can be retried."""
         sess = self._live(sid)
         out = self._step({sess.slot: sid}, final_slots=(sess.slot,))
-        self._admit.discard(sid)  # consumed out of band: stop its entries
-        sess.state = DETACHED     # aging toward the next admission
-        del self._by_slot[sess.slot]
-        bisect.insort(self._free, sess.slot)
-        self._fleet.reset_slots([sess.slot])
-        sess.slot = -1
+        if out is None:
+            raise RuntimeError(
+                f"detach of session {sid} degraded (fleet step failed after "
+                f"{self.faults.max_step_retries} retries); chunks restored, "
+                "retry the detach"
+            )
+        self._release_slot(sess, DETACHED)
         return out[0].result
 
     def forget(self, sid: int) -> None:
-        """Drop a *detached* session's stats record. Detached sessions are
-        retained for inspection, not forever by obligation — a long-lived
-        churny deployment calls this (or periodically sweeps
-        ``detached_sessions``) to bound host memory."""
+        """Drop a *closed* (detached / quarantined / evicted) session's
+        record. Closed sessions are retained for inspection, not forever
+        by obligation — a long-lived churny deployment calls this (or
+        periodically sweeps the ``*_sessions`` lists) to bound host
+        memory."""
         sess = self._sessions.get(sid)
         if sess is None:
             return
-        if sess.state != DETACHED:
+        if sess.state == LIVE:
             raise RuntimeError(f"session {sid} is {sess.state}; detach first")
         del self._sessions[sid]
 
-    @property
-    def detached_sessions(self) -> list[int]:
-        """Sids of retained detached-session records (see :meth:`forget`)."""
-        return [
-            sid for sid, s in self._sessions.items() if s.state == DETACHED
-        ]
+    # ------------------------------------------------------------------
+    # Fault paths (DESIGN.md Sec. 13).
+    # ------------------------------------------------------------------
+
+    def _quarantine(self, sess: SensorSession, message: str) -> None:
+        """Validation fault: record, drop the suspect queue + slot
+        remainder, recycle the slot. Only this session is touched."""
+        err = sess.record_error("validation", message)
+        sess.stats.validation_failures += 1
+        self.errors.append(err)
+        self.quarantines += 1
+        sess.drop_queue()
+        self._release_slot(sess, QUARANTINED)
+
+    def _sweep_liveness(self) -> None:
+        """Evict every live session past its heartbeat deadline: flush
+        its queue + trailing window in its own single-slot step, recycle
+        the slot, and demote the pool tier if the tail emptied."""
+        for sid in self._health.expired():
+            self._evict(sid)
+
+    def _evict(self, sid: int) -> None:
+        sess = self._sessions[sid]
+        out = self._step({sess.slot: sid}, final_slots=(sess.slot,))
+        if out is None:
+            return  # flush degraded; chunks restored, retry next sweep
+        err = sess.record_error(
+            "evicted",
+            f"no heartbeat for > {self.faults.heartbeat_timeout_s} s; "
+            "slot flushed and recycled",
+        )
+        self.errors.append(err)
+        self.evictions += 1
+        sess.tail_result = out[0].result
+        self._release_slot(sess, EVICTED)
+        self._maybe_demote()
+
+    def _release_slot(self, sess: SensorSession, state: str) -> None:
+        """Common slot-recycle path for every exit (detach / quarantine /
+        evict): admitter purged by the caller, carry zeroed, slot freed."""
+        self._health.forget(sess.sid)
+        self._admit.discard(sess.sid)
+        del self._by_slot[sess.slot]
+        bisect.insort(self._free, sess.slot)
+        self._fleet.reset_slots([sess.slot])
+        sess.state = state
+        sess.slot = -1
+
+    def _maybe_demote(self) -> None:
+        """Shrink the pool back a tier when the tail slots all freed up
+        (carry sliced + re-sharded; surviving slots keep state verbatim)."""
+        if not self.faults.demote_tiers:
+            return
+        while True:
+            cap = self.capacity
+            if cap > self.tiers[-1]:
+                lower = cap // 2  # doubling schedule past the last tier
+            else:
+                lower = max((t for t in self.tiers if t < cap), default=None)
+            if lower is None or (self._by_slot and max(self._by_slot) >= lower):
+                return
+            self._fleet.shrink(lower, occupied=list(self._by_slot))
+            self._free = [s for s in self._free if s < lower]
+            self.demotions += 1
 
     # ------------------------------------------------------------------
     # Internals.
@@ -233,8 +385,18 @@ class DetectionService:
 
     def _step(
         self, by_slot: dict[int, int], final_slots: tuple[int, ...]
-    ) -> list[ServedFeed]:
-        """One fleet step over the named slots' merged queues."""
+    ) -> list[ServedFeed] | None:
+        """One fleet step over the named slots' merged queues.
+
+        A step that raises is retried up to ``max_step_retries`` times
+        with exponential backoff (the fleet validates before mutating,
+        so a failed dispatch leaves the carry untouched and the same
+        chunks re-feed exactly). When retries are exhausted: with
+        ``degrade_on_step_failure`` every taken chunk is restored to its
+        session queue (original arrival stamps — nothing lost, latency
+        clocks intact), the round is recorded degraded, and ``None`` is
+        returned; otherwise the last error propagates (strict default).
+        """
         chunks: list = [None] * self.capacity
         arrivals: dict[int, float | None] = {}
         for slot, sid in by_slot.items():
@@ -242,7 +404,38 @@ class DetectionService:
         final = np.zeros(self.capacity, bool)
         if final_slots:
             final[list(final_slots)] = True
-        out = self._fleet.feed(chunks, final=final)
+        out = None
+        for attempt in range(self.faults.max_step_retries + 1):
+            try:
+                out = self._fleet.feed(chunks, final=final)
+                break
+            except Exception as e:  # noqa: BLE001 — device-step failure
+                last_err = e
+                if attempt == self.faults.max_step_retries:
+                    if not self.faults.degrade_on_step_failure:
+                        raise
+                    break
+                self.step_retries += 1
+                backoff = self.faults.retry_backoff_s * (2**attempt)
+                if backoff:
+                    self._sleep(backoff)
+        if out is None:
+            self.degraded_rounds += 1
+            for slot, sid in by_slot.items():
+                sess = self._sessions[sid]
+                if chunks[slot] is not None:
+                    sess.restore(chunks[slot], arrivals[sid])
+                    self._admit.restate(sid, sess.queued_events)
+                sess.stats.degraded_rounds += 1
+                self.errors.append(
+                    sess.record_error(
+                        "degraded_round",
+                        f"fleet step failed after {self.faults.max_step_retries}"
+                        f" retries ({type(last_err).__name__}: {last_err}); "
+                        "chunks restored",
+                    )
+                )
+            return None
         now = self.clock()
         served: list[ServedFeed] = []
         for slot in sorted(by_slot):
@@ -252,6 +445,8 @@ class DetectionService:
             arrival = arrivals[sid]
             latency_ms = None if arrival is None else (now - arrival) * 1e3
             sess.record_step(result.num_windows, latency_ms)
+            if latency_ms is not None:
+                self._health.note_latency(sid, latency_ms)
             served.append(
                 ServedFeed(sid=sid, result=result, latency_ms=latency_ms or 0.0)
             )

@@ -46,11 +46,15 @@ except ImportError:
         seq = list(seq)
         return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
 
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
     st = SimpleNamespace(
         integers=_integers,
         tuples=_tuples,
         lists=_lists,
         sampled_from=_sampled_from,
+        floats=_floats,
     )
 
     def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):

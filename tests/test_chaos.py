@@ -1,0 +1,144 @@
+"""Chaos-injection harness: the fault-tolerance acceptance gate.
+
+Runs the seeded fault schedule — every entry of the taxonomy — against a
+fault-tolerant DetectionService and pins the two invariants of DESIGN.md
+Sec. 13:
+
+* no injected fault ever raises out of ``feed`` / ``pump`` (each leaves
+  a structured SessionError instead), and
+* every *healthy* session's outputs are bit-identical to a fault-free
+  reference run of the same feeds — fault isolation, measured bitwise.
+
+Everything here is deterministic: fake clock, seeded schedule, seeded
+payloads. The latency soak over the same harness lives in
+``benchmarks/chaos_soak.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.chaos import (
+    FAULT_TAXONOMY,
+    ChaosConfig,
+    ChaosHarness,
+    compare_outputs,
+)
+
+SMALL = ChaosConfig(n_sensors=5, n_faulty=2, n_rounds=32, tiers=(4, 8), seed=3)
+
+
+@pytest.fixture(scope="module")
+def report():
+    """One full-taxonomy run shared by the invariant tests."""
+    return ChaosHarness(SMALL).run()
+
+
+def test_every_fault_fires_at_least_once(report):
+    assert set(report.fired) == set(FAULT_TAXONOMY)
+    missing = [k for k, n in report.fired.items() if n < 1]
+    assert not missing, f"faults never injected: {missing}"
+
+
+def test_no_fault_escapes_the_service(report):
+    assert report.escaped_errors == []
+
+
+def test_healthy_sessions_bit_identical_under_faults(report):
+    assert report.healthy_windows > 0  # the comparison is not vacuous
+    assert report.bit_identical, report.mismatches
+
+
+def test_shed_accounting_is_exact(report):
+    shed = report.shed
+    assert shed["exact"]
+    assert shed["offered"] == shed["accepted"] + shed["shed"]
+    assert shed["shed"] > 0  # the burst fault actually exercised the budget
+
+
+def test_faults_leave_structured_error_records(report):
+    kinds = {e.kind for e in report.errors}
+    assert "validation" in kinds  # non_monotone / duplicate / garbage_coords
+    assert "evicted" in kinds  # stall -> heartbeat eviction
+    n_validation = sum(e.kind == "validation" for e in report.errors)
+    assert n_validation == report.quarantines
+    assert all(e.message for e in report.errors)
+    assert all(e.sid >= 0 and e.time_s >= 0.0 for e in report.errors)
+
+
+def test_quarantine_eviction_and_retry_paths_all_taken(report):
+    assert report.quarantines >= 1
+    assert report.evictions >= 1
+    assert report.step_retries + report.degraded_rounds >= 1
+
+
+def test_schedule_is_deterministic_per_seed():
+    assert ChaosHarness(SMALL).schedule() == ChaosHarness(SMALL).schedule()
+    other = ChaosHarness(
+        ChaosConfig(
+            n_sensors=5, n_faulty=2, n_rounds=32, tiers=(4, 8), seed=4
+        )
+    ).schedule()
+    assert other != ChaosHarness(SMALL).schedule()
+
+
+def test_degraded_rounds_recover_bit_identically():
+    """A schedule of only step_exception faults drives both variants —
+    heal-within-retries and retry-exhausted degraded rounds — and the
+    restored-and-refed chunks still match the fault-free run bitwise."""
+    cfg = ChaosConfig(
+        n_sensors=4,
+        n_faulty=1,
+        n_rounds=24,
+        tiers=(4,),
+        seed=11,
+        faults=("step_exception",),
+    )
+    rep = ChaosHarness(cfg).run()
+    assert rep.fired["step_exception"] >= 2
+    assert rep.step_retries >= 1
+    assert rep.degraded_rounds >= 1
+    assert rep.escaped_errors == []
+    assert rep.bit_identical, rep.mismatches
+    assert any(e.kind == "degraded_round" for e in rep.errors)
+
+
+def test_eviction_churn_interleaved_with_live_feeds():
+    """Heartbeat evictions and attach/detach churn interleave with live
+    feeds on the other slots: every stall window ends in an eviction
+    whose flush + slot recycle never perturbs the healthy streams."""
+    cfg = ChaosConfig(
+        n_sensors=5,
+        n_faulty=2,
+        n_rounds=36,
+        tiers=(4, 8),
+        seed=5,
+        faults=("stall", "churn"),
+    )
+    rep = ChaosHarness(cfg).run()
+    assert rep.fired["stall"] >= 1 and rep.fired["churn"] >= 1
+    assert rep.evictions >= 1
+    assert rep.escaped_errors == []
+    assert rep.healthy_windows > 0
+    assert rep.bit_identical, rep.mismatches
+    assert any(e.kind == "evicted" for e in rep.errors)
+
+
+def test_chaos_config_validation():
+    with pytest.raises(ValueError, match="n_faulty"):
+        ChaosConfig(n_sensors=3, n_faulty=3)
+    with pytest.raises(ValueError, match="unknown faults"):
+        ChaosConfig(faults=("non_monotone", "gremlins"))
+    with pytest.raises(ValueError, match="stall_rounds"):
+        ChaosConfig(heartbeat_rounds=4, stall_rounds=5)
+    with pytest.raises(ValueError, match="queue budget"):
+        ChaosConfig(chunk_events=900, queue_budget_events=800)
+
+
+def test_compare_outputs_flags_real_differences():
+    a = [np.arange(6).reshape(2, 3), np.ones(4)]
+    assert compare_outputs(a, [x.copy() for x in a], "s") == []
+    b = [np.arange(6).reshape(2, 3), np.zeros(4)]
+    bad = compare_outputs(a, b, "s")
+    assert len(bad) == 1 and "4/4 elements differ" in bad[0]
+    assert compare_outputs(a, a[:1], "s") == ["s: 2 surfaces vs 1"]
+    c = [np.arange(6).reshape(3, 2), np.ones(4)]
+    assert "shape" in compare_outputs(a, c, "s")[0]

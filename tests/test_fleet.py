@@ -432,3 +432,51 @@ print("GROW-RESHARD-OK")
         device_count=4,
     )
     assert "GROW-RESHARD-OK" in out
+
+
+def test_fleet_shrink_preserves_surviving_slots():
+    """Demote a 4-slot pool to 2 mid-stream: the surviving slots' carries
+    are untouched and their streams finish bit-identical to the scan."""
+    recs = _fleet_recordings()[:2]
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=4)
+    half = [len(r) // 2 for r in recs]
+    first = fp.feed([
+        (recs[0].x[:half[0]], recs[0].y[:half[0]],
+         recs[0].t[:half[0]], recs[0].p[:half[0]]),
+        (recs[1].x[:half[1]], recs[1].y[:half[1]],
+         recs[1].t[:half[1]], recs[1].p[:half[1]]),
+        None,
+        None,
+    ])
+    fp.shrink(2, occupied=(0, 1))
+    assert fp.n_sensors == 2 and len(fp.state.cursors) == 2
+    assert fp.state.atlas.shape[0] == 2
+    second = fp.feed([
+        (recs[0].x[half[0]:], recs[0].y[half[0]:],
+         recs[0].t[half[0]:], recs[0].p[half[0]:]),
+        (recs[1].x[half[1]:], recs[1].y[half[1]:],
+         recs[1].t[half[1]:], recs[1].p[half[1]:]),
+    ])
+    tail = fp.flush()
+    for s in range(2):
+        _assert_stream_equals_scan(
+            [first.sensor(s), second.sensor(s), tail.sensor(s)],
+            run_recording_scan(recs[s], config),
+        )
+
+
+def test_fleet_shrink_validation():
+    fp = FleetPipeline(PipelineConfig(), n_sensors=4)
+    with pytest.raises(ValueError, match="at least one"):
+        fp.shrink(0)
+    with pytest.raises(ValueError, match="use grow"):
+        fp.shrink(8)
+    with pytest.raises(ValueError, match=r"occupied slots \[3\]"):
+        fp.shrink(2, occupied=(0, 3))
+    fp.shrink(4)  # no-op at current size
+    assert fp.n_sensors == 4
+    fp.shrink(2, occupied=(0, 1))
+    assert fp.n_sensors == 2
+    fp.grow(4)  # and back up: the inverse round-trips
+    assert fp.n_sensors == 4

@@ -121,3 +121,81 @@ def test_discard_removes_item_entries_and_weight():
     adm2.submit("fresh")
     assert not adm2.ready()  # only the fresh entry's age counts
     assert adm.discard("missing") == 0
+
+
+# ---------------------------------------------------------------------------
+# Edge cases + restate (out-of-band weight changes).
+# ---------------------------------------------------------------------------
+
+def test_oldest_age_resets_when_drained_empty():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 100), clock)
+    adm.submit("a")
+    clock.now = 1.0
+    adm.discard("a")
+    assert adm.oldest_age_s() == 0.0 and not adm.ready()
+
+
+def test_pop_includes_entry_exactly_at_weight_boundary():
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 4), FakeClock())
+    adm.submit("a", weight=2)
+    adm.submit("b", weight=2)  # 2 + 2 == max_items exactly: both fit
+    adm.submit("c", weight=1)
+    assert adm.pop() == ["a", "b"]
+    assert adm.items == ["c"]
+
+
+def test_single_oversized_submit_is_ready_immediately():
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 250), FakeClock())
+    adm.submit("flood", weight=300)  # one chunk over the whole budget
+    assert adm.ready()
+    assert adm.pop() == ["flood"]
+    assert adm.pending_weight == 0 and not adm.ready()
+
+
+def test_restate_replaces_entries_with_one_exact_weight():
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 100), FakeClock())
+    adm.submit("a", weight=30)
+    adm.submit("b", weight=10)
+    adm.submit("a", weight=20)
+    adm.restate("a", 12)  # e.g. the session's queue budget shed 38 events
+    assert adm.pending_weight == 22
+    assert sorted(adm.items) == ["a", "b"]
+    assert adm.items.count("a") == 1
+
+
+def test_restate_keeps_oldest_arrival_for_time_threshold():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 10_000), clock)
+    adm.submit("a", weight=50)
+    clock.now = 0.010
+    adm.restate("a", 30)
+    clock.now = 0.021  # 21 ms after the ORIGINAL arrival
+    assert adm.ready()  # the shed did not reset a's latency clock
+
+
+def test_restate_zero_weight_clears_and_fresh_item_stamps_now():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(0.02, 100), clock)
+    adm.submit("a", weight=5)
+    adm.restate("a", 0)
+    assert adm.items == [] and adm.pending_weight == 0
+    clock.now = 1.0
+    adm.restate("b", 7)  # no prior entries: stamped at the current clock
+    assert adm.items == ["b"] and adm.pending_weight == 7
+    assert adm.oldest_age_s() == 0.0
+    with pytest.raises(ValueError, match="weight"):
+        adm.restate("b", -1)
+
+
+def test_restate_inserts_in_arrival_order():
+    clock = FakeClock()
+    adm = DualThresholdAdmitter(AdmissionConfig(10.0, 3), clock)
+    adm.submit("a", weight=1)
+    clock.now = 0.01
+    adm.submit("b", weight=1)
+    clock.now = 0.02
+    adm.submit("c", weight=1)
+    adm.restate("b", 1)  # re-stated entry keeps its slot in the order
+    assert adm.items == ["a", "b", "c"]
+    assert adm.pop() == ["a", "b", "c"]

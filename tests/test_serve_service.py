@@ -372,3 +372,336 @@ def test_latency_samples_are_bounded():
     assert len(stats.latency_ms) == MAX_LATENCY_SAMPLES
     assert stats.latency_ms[0] == 100.0  # oldest samples dropped
     assert stats.latency_percentile(100) == float(MAX_LATENCY_SAMPLES + 99)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance (DESIGN.md Sec. 13). The end-to-end chaos gate lives in
+# test_chaos.py; these pin each degraded mode in isolation.
+# ---------------------------------------------------------------------------
+
+from repro.serve import FaultConfig  # noqa: E402
+
+
+class _FlakyFleet:
+    """Fleet wrapper whose ``feed`` raises the next ``fail`` times."""
+
+    def __init__(self, fleet, fail: int):
+        self._fleet = fleet
+        self.fail = fail
+
+    def __getattr__(self, name):
+        return getattr(self._fleet, name)
+
+    def feed(self, *args, **kwargs):
+        if self.fail > 0:
+            self.fail -= 1
+            raise RuntimeError("boom")
+        return self._fleet.feed(*args, **kwargs)
+
+
+def test_fault_config_validation():
+    for kw in (
+        {"on_validation_error": "panic"},
+        {"shed_policy": "newest"},
+        {"queue_budget_events": 0},
+        {"heartbeat_timeout_s": 0.0},
+        {"max_step_retries": -1},
+        {"retry_backoff_s": -0.1},
+        {"straggler_factor": 1.0},
+    ):
+        with pytest.raises(ValueError):
+            FaultConfig(**kw)
+
+
+def test_quarantine_on_validation_fault():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        faults=FaultConfig(on_validation_error="quarantine"),
+        clock=FakeClock(),
+    )
+    a = svc.attach("suspect")
+    slot_a = svc.session(a).slot
+    x, y, t, p = _spaced_stream(20, 200)
+    svc.feed(a, x[:100], y[:100], t[:100], p[:100])
+    assert svc.feed(a, x[:10], y[:10], t[:10], p[:10]) == []  # regresses
+    sess = svc.session(a)
+    assert sess.state == "quarantined"
+    assert svc.quarantines == 1
+    assert svc.quarantined_sessions == [a]
+    assert sess.queued_events == 0  # suspect queue dropped
+    assert sess.stats.validation_failures == 1
+    assert [e.kind for e in sess.errors] == ["validation"]
+    assert svc.errors == sess.errors
+    with pytest.raises(RuntimeError, match="quarantined"):
+        svc.feed(a, x[:1], y[:1], t[:1], p[:1])
+    b = svc.attach("next-tenant")  # the slot was recycled
+    assert svc.session(b).slot == slot_a
+    svc.forget(a)  # quarantined records can be forgotten
+    assert svc.quarantined_sessions == []
+
+
+def test_quarantine_isolates_other_sessions():
+    """A garbage-coordinate quarantine on one session never perturbs a
+    concurrently streaming one — its outputs still equal the scan."""
+    rec = _service_recordings()[0]
+    config = PipelineConfig()
+    svc = DetectionService(
+        config, tiers=(2,),
+        faults=FaultConfig(on_validation_error="quarantine"),
+        clock=FakeClock(),
+    )
+    good, bad = svc.attach("good"), svc.attach("bad")
+    parts = {good: [], bad: []}
+    bx, by, bt, bp = _spaced_stream(21, 100)
+    chunks = list(iter_chunks(rec))
+    for j, chunk in enumerate(chunks):
+        _collect(svc.feed(good, *chunk), parts)
+        if j == 1:
+            garbage = bx + (np.int64(1) << 31)
+            assert svc.feed(bad, garbage, by, bt, bp) == []
+            assert svc.session(bad).state == "quarantined"
+        _collect(svc.pump(force=True), parts)
+    parts[good].append(svc.detach(good))
+    _assert_stream_equals_scan(parts[good], run_recording_scan(rec, config))
+
+
+def test_heartbeat_eviction_flushes_and_recycles():
+    clock = FakeClock()
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        faults=FaultConfig(heartbeat_timeout_s=0.05),
+        clock=clock,
+    )
+    a, b = svc.attach("alive"), svc.attach("silent")
+    xa, ya, ta, pa = _spaced_stream(22, 300)
+    xb, yb, tb, pb = _spaced_stream(23, 300)
+    svc.feed(a, xa[:100], ya[:100], ta[:100], pa[:100])
+    svc.feed(b, xb[:100], yb[:100], tb[:100], pb[:100])
+    clock.now += 0.03
+    svc.feed(a, xa[100:200], ya[100:200], ta[100:200], pa[100:200])  # beat
+    assert svc.session(b).state == "live"  # 30 ms silent: still inside
+    clock.now += 0.03
+    svc.feed(a, xa[200:], ya[200:], ta[200:], pa[200:])  # sweeps b out
+    sess_b = svc.session(b)
+    assert sess_b.state == "evicted"
+    assert svc.evictions == 1 and svc.evicted_sessions == [b]
+    assert sess_b.tail_result is not None  # queued events flushed to a tail
+    assert sess_b.tail_result.num_windows >= 1
+    assert [e.kind for e in sess_b.errors] == ["evicted"]
+    with pytest.raises(RuntimeError, match="evicted"):
+        svc.feed(b, xb[:1], yb[:1], tb[:1], pb[:1])
+    c = svc.attach("next")  # slot recycled
+    assert svc.session(c).slot == 1
+    svc.forget(b)
+    assert svc.evicted_sessions == []
+    # The survivor's stream is intact: detach flushes its remainder.
+    assert svc.detach(a).num_windows >= 0
+
+
+def test_eviction_demotes_capacity_tier():
+    clock = FakeClock()
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2, 4),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        faults=FaultConfig(heartbeat_timeout_s=0.05),
+        clock=clock,
+    )
+    a, b = svc.attach(), svc.attach()
+    c = svc.attach()  # promotes to capacity 4, slot 2
+    assert svc.capacity == 4 and svc.session(c).slot == 2
+    x, y, t, p = _spaced_stream(24, 300)
+    for sid in (a, b, c):
+        svc.feed(sid, x[:100], y[:100], t[:100], p[:100])
+    clock.now += 0.03
+    for sid in (a, b):
+        svc.feed(sid, x[100:200], y[100:200], t[100:200], p[100:200])
+    clock.now += 0.03  # c is now 60 ms silent; a and b only 30
+    svc.pump(force=True)
+    assert svc.session(c).state == "evicted"
+    assert svc.capacity == 2 and svc.demotions == 1  # tail slot freed
+    # Survivors keep streaming at the demoted tier.
+    for sid in (a, b):
+        svc.feed(sid, x[200:], y[200:], t[200:], p[200:])
+        assert svc.detach(sid) is not None
+
+
+def test_queue_budget_reject_sheds_whole_chunk():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        faults=FaultConfig(queue_budget_events=100, shed_policy="reject"),
+        clock=FakeClock(),
+    )
+    sid = svc.attach()
+    x, y, t, p = _spaced_stream(25, 240)
+    assert svc.feed(sid, x[:80], y[:80], t[:80], p[:80]) == []
+    assert svc.feed(sid, x[80:160], y[80:160], t[80:160], p[80:160]) == []
+    st_ = svc.session(sid).stats
+    assert st_.offered_events == 160 and st_.events == 80
+    assert st_.shed_events == 80 and st_.shed_chunks == 1
+    assert st_.offered_events == st_.events + st_.shed_events  # exact
+    assert svc.session(sid).queued_events == 80  # oldest data kept
+    assert svc._admit.pending_weight == 80  # admitter re-stated exactly
+    svc.pump(force=True)  # queue drains; the stream has a gap, which the
+    # pipeline tolerates: later chunks still validate against true last_t
+    assert svc.feed(sid, x[160:], y[160:], t[160:], p[160:]) == []
+    assert svc.session(sid).stats.events == 160
+
+
+def test_queue_budget_drop_oldest_keeps_newest():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        faults=FaultConfig(
+            queue_budget_events=100, shed_policy="drop_oldest"
+        ),
+        clock=FakeClock(),
+    )
+    sid = svc.attach()
+    x, y, t, p = _spaced_stream(26, 160)
+    svc.feed(sid, x[:80], y[:80], t[:80], p[:80])
+    svc.feed(sid, x[80:], y[80:], t[80:], p[80:])  # evicts the older 80
+    sess = svc.session(sid)
+    assert sess.queued_events == 80
+    assert sess.stats.shed_events == 80 and sess.stats.shed_chunks == 1
+    assert sess.stats.events == 80  # net of the un-counted shed chunk
+    assert sess.stats.offered_events == 160
+    assert svc._admit.pending_weight == 80
+    # A single over-budget chunk keeps only its newest `budget` events.
+    svc2 = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        faults=FaultConfig(
+            queue_budget_events=100, shed_policy="drop_oldest"
+        ),
+        clock=FakeClock(),
+    )
+    sid2 = svc2.attach()
+    x2, y2, t2, p2 = _spaced_stream(27, 150)
+    svc2.feed(sid2, x2, y2, t2, p2)
+    sess2 = svc2.session(sid2)
+    assert sess2.queued_events == 100
+    assert sess2.stats.shed_events == 50
+    assert sess2.stats.offered_events == 150
+
+
+def test_step_retry_heals_transient_failure():
+    sleeps = []
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        faults=FaultConfig(max_step_retries=2, retry_backoff_s=0.01),
+        clock=FakeClock(),
+        sleep=sleeps.append,
+    )
+    sid = svc.attach()
+    svc._fleet = _FlakyFleet(svc._fleet, fail=1)
+    svc.feed(sid, *_spaced_stream(28, 100))
+    served = svc.pump(force=True)
+    assert len(served) == 1 and served[0].sid == sid
+    assert svc.step_retries == 1 and svc.degraded_rounds == 0
+    assert sleeps == [0.01]  # exponential base, first attempt
+
+
+def test_degraded_round_restores_chunks_bit_identically():
+    sleeps = []
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        faults=FaultConfig(
+            max_step_retries=2, retry_backoff_s=0.01,
+            degrade_on_step_failure=True,
+        ),
+        clock=FakeClock(),
+        sleep=sleeps.append,
+    )
+    sid = svc.attach()
+    chunk = _spaced_stream(29, 100)
+    svc.feed(sid, *chunk)
+    svc._fleet = _FlakyFleet(svc._fleet, fail=3)  # all attempts fail
+    assert svc.pump(force=True) == []  # degraded, not raised
+    sess = svc.session(sid)
+    assert svc.degraded_rounds == 1 and sess.stats.degraded_rounds == 1
+    assert svc.step_retries == 2
+    assert sleeps == [0.01, 0.02]  # exponential backoff between attempts
+    assert sess.queued_events == 100  # chunk restored, nothing lost
+    assert sess.state == "live"
+    assert [e.kind for e in sess.errors] == ["degraded_round"]
+    served = svc.pump(force=True)  # fleet healed: same chunk re-fed
+    assert len(served) == 1
+    # The re-fed round equals a never-faulted service run bitwise.
+    from repro.serve.chaos import compare_outputs, concat_outputs
+
+    ref = DetectionService(PipelineConfig(), tiers=(2,), clock=FakeClock())
+    rid = ref.attach()
+    ref.feed(rid, *chunk)
+    ref_served = ref.pump(force=True)
+    assert compare_outputs(
+        concat_outputs([served[0].result, svc.detach(sid)]),
+        concat_outputs([ref_served[0].result, ref.detach(rid)]),
+        "degraded",
+    ) == []
+
+
+def test_strict_step_failure_raises_after_retries():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        faults=FaultConfig(max_step_retries=1),  # strict: no degrade
+        clock=FakeClock(),
+    )
+    sid = svc.attach()
+    svc.feed(sid, *_spaced_stream(30, 100))
+    svc._fleet = _FlakyFleet(svc._fleet, fail=2)
+    with pytest.raises(RuntimeError, match="boom"):
+        svc.pump(force=True)
+    assert svc.step_retries == 1
+
+
+def test_degraded_detach_is_retryable():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(2,),
+        faults=FaultConfig(
+            max_step_retries=0, degrade_on_step_failure=True
+        ),
+        clock=FakeClock(),
+    )
+    sid = svc.attach()
+    svc.feed(sid, *_spaced_stream(31, 100))
+    svc._fleet = _FlakyFleet(svc._fleet, fail=1)
+    with pytest.raises(RuntimeError, match="retry the detach"):
+        svc.detach(sid)
+    sess = svc.session(sid)
+    assert sess.state == "live" and sess.queued_events == 100
+    assert svc.detach(sid) is not None  # healed: retry succeeds
+    assert sess.state == "detached"
+
+
+def test_straggler_flagging_filters_to_live_sessions():
+    svc = DetectionService(
+        PipelineConfig(), tiers=(4,),
+        faults=FaultConfig(straggler_factor=2.0, straggler_alpha=1.0),
+        clock=FakeClock(),
+    )
+    a, b, c = svc.attach(), svc.attach(), svc.attach()
+    for _ in range(3):
+        svc._health.note_latency(a, 5.0)
+        svc._health.note_latency(b, 5.0)
+        svc._health.note_latency(c, 50.0)  # 10x the fleet median
+    assert svc.stragglers() == [c]
+    svc.detach(c)  # departed sessions stop weighing on the fleet
+    assert svc.stragglers() == []
+
+
+def test_double_detach_and_closed_session_lifecycle():
+    svc = DetectionService(PipelineConfig(), tiers=(2,), clock=FakeClock())
+    a = svc.attach("once")
+    svc.detach(a)
+    with pytest.raises(RuntimeError, match="detached"):
+        svc.detach(a)  # double detach is an error, not a silent no-op
+    with pytest.raises(RuntimeError, match="detached"):
+        svc.feed(a, *_spaced_stream(32, 10))
+    assert svc.detached_sessions == [a]
+    assert svc.session(a).stats is not None  # record stays readable
+    svc.forget(a)
+    with pytest.raises(KeyError):
+        svc.session(a)
+    svc.forget(a)  # idempotent on unknown sids

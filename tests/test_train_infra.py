@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.distributed.compression import (
     dequantize_int8,
@@ -267,3 +268,56 @@ def test_serving_engine_generates():
                        max_new=4, max_batch=3)
     assert stats["requests"] == 6
     assert stats["tokens_generated"] == 24
+
+
+def test_heartbeat_register_forget_roster():
+    t = [0.0]
+    mon = HeartbeatMonitor(timeout_s=10, clock=lambda: t[0])
+    assert mon.nodes == []
+    mon.register("a")
+    t[0] = 2.0
+    mon.register("b")
+    assert "a" in mon and "ghost" not in mon
+    assert mon.nodes == ["a", "b"]
+    assert mon.last_beat_s("a") == 0.0 and mon.last_beat_s("b") == 2.0
+    with pytest.raises(ValueError, match="already registered"):
+        mon.register("a")
+    with pytest.raises(KeyError, match="unregistered"):
+        mon.beat("ghost")  # a typo'd id must not create a phantom node
+    mon.forget("a")
+    assert "a" not in mon
+    with pytest.raises(KeyError):
+        mon.forget("a")
+    t[0] = 20.0
+    assert mon.failed_nodes() == ["b"]  # forgotten nodes never count
+
+
+def test_straggler_fleet_median_even_count_unbiased():
+    tr = StragglerTracker()
+    for i, v in enumerate([1.0, 2.0, 3.0, 4.0]):
+        tr.record(f"n{i}", v)
+    # Mean of the two middle EMAs — the upper-middle element alone (3.0)
+    # would inflate the straggler threshold by 20% here.
+    assert tr.fleet_median() == pytest.approx(2.5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.1, 1e3), min_size=1, max_size=25))
+def test_straggler_fleet_median_matches_numpy_oracle(vals):
+    tr = StragglerTracker()
+    for i, v in enumerate(vals):
+        tr.record(i, v)  # first record seeds the EMA at the value itself
+    assert tr.fleet_median() == pytest.approx(float(np.median(vals)))
+
+
+def test_straggler_forget_and_ema_accessor():
+    tr = StragglerTracker()
+    tr.record("a", 1.0)
+    tr.record("b", 100.0)
+    assert tr.ema("b") == pytest.approx(100.0)
+    assert tr.ema("ghost") is None
+    tr.forget("b")
+    assert tr.fleet_median() == pytest.approx(1.0)
+    tr.forget("ghost")  # no-op, departed nodes may be forgotten twice
+    assert tr.stragglers() == []
+    assert StragglerTracker().fleet_median() == 0.0
