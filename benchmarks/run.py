@@ -50,6 +50,7 @@ BENCHES = {
     "stream": ("stream_latency.py", "BENCH_stream.json"),
     "fleet": ("fleet_throughput.py", "BENCH_fleet.json"),
     "serve": ("serve_latency.py", "BENCH_serve.json"),
+    "ingest": ("serve_saturation.py", "BENCH_ingest.json"),
     "chaos": ("chaos_soak.py", "BENCH_chaos.json"),
 }
 

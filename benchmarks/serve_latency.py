@@ -50,7 +50,7 @@ import jax
 import numpy as np
 from _common import git_commit
 
-from repro.core.pipeline import PipelineConfig
+from repro.core.pipeline import FleetPipeline, PipelineConfig
 from repro.core.pipeline import fleet as fleet_mod
 from repro.data.evas import iter_chunks
 from repro.data.synthetic import SCENARIO_FAMILIES, make_fleet_recordings
@@ -151,6 +151,54 @@ def _replay(recordings):
     }
 
 
+def _host_view_bench(slots: int = 32, hot: int = 2, iters: int = 30):
+    """Micro-bench the sparse host copy-back (FleetResult._host_view).
+
+    A churny service pool is mostly idle slots: with ``hot`` of ``slots``
+    sensors closing windows, the hot-row gather path moves only the
+    valid-window rows to host instead of the full (S, W, ...) stacked
+    leaves. Each iteration feeds one live-cadence round, waits for the
+    device step (so only the copy-back is on the clock), then times the
+    full stacked copy vs the gather path on the same round's buffers.
+    Returns per-variant median ms.
+    """
+    fp = FleetPipeline(PipelineConfig(), n_sensors=slots,
+                       uniform_fast_path=False)
+    rng = np.random.default_rng(11)
+    n = 250
+    pos = 0
+    full_ms, gather_ms = [], []
+    for it in range(iters + 1):
+        chunks = [None] * slots
+        for s in range(hot):
+            t = (np.arange(n, dtype=np.int64) + 1 + pos) * 80
+            chunks[s] = (
+                rng.integers(40, 560, n).astype(np.int64),
+                rng.integers(40, 400, n).astype(np.int64),
+                t,
+                rng.integers(0, 2, n).astype(np.int64),
+            )
+        pos += n
+        res = fp.feed_async(chunks).wait()
+        stacked = (res.clusters, res.metrics, res.tracks, res.final_tracks)
+        t0 = time.perf_counter()
+        jax.tree.map(np.asarray, stacked)
+        t1 = time.perf_counter()
+        res._host_view()
+        t2 = time.perf_counter()
+        if it:  # first iteration carries the compile/warmup
+            full_ms.append((t1 - t0) * 1e3)
+            gather_ms.append((t2 - t1) * 1e3)
+        assert res._hot_rows is not None  # the gather path was exercised
+    return {
+        "slots": slots,
+        "hot_slots": hot,
+        "full_copy_ms": round(float(np.median(full_ms)), 4),
+        "gather_ms": round(float(np.median(gather_ms)), 4),
+        "speedup": round(float(np.median(full_ms) / np.median(gather_ms)), 2),
+    }
+
+
 def main() -> None:
     # Enough distinct recordings for the whole churn schedule, per pass.
     n_recs = CHURN_START + N_SESSIONS + N_ROUNDS // CHURN_EVERY + 2
@@ -201,6 +249,13 @@ def main() -> None:
         f"({'PASS' if gate_p99 else 'FAIL'})"
     )
 
+    hv = _host_view_bench()
+    print(
+        f"host copy-back, {hv['hot_slots']}/{hv['slots']} slots hot: "
+        f"full {hv['full_copy_ms']:.3f} ms vs hot-row gather "
+        f"{hv['gather_ms']:.3f} ms ({hv['speedup']:.2f}x)"
+    )
+
     payload = {
         "backend": jax.default_backend(),
         "commit": git_commit(),
@@ -226,6 +281,7 @@ def main() -> None:
             "max": round(peak, 3),
         },
         "n_passes": N_PASSES,
+        "host_view_sparse": hv,
         "bench": {
             "name": "serve_latency",
             "p50_ms": round(p50, 3),

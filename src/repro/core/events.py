@@ -459,20 +459,32 @@ def pack_bounds_into(
     t: np.ndarray,
     p: np.ndarray,
     bounds: list[tuple[int, int, int]],
-    bx: np.ndarray,
-    by: np.ndarray,
-    bt: np.ndarray,
-    bp: np.ndarray,
-    bv: np.ndarray,
+    bx: np.ndarray | None = None,
+    by: np.ndarray | None = None,
+    bt: np.ndarray | None = None,
+    bp: np.ndarray | None = None,
+    bv: np.ndarray | None = None,
+    *,
+    out: tuple[np.ndarray, ...] | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Numpy core of :func:`pack_bounds`: scatter windows into preallocated
     (>= W, capacity) arrays (rows past ``len(bounds)`` are left untouched).
 
     Shared by the single-recording packer and the fleet engine, which
     packs every sensor into one (S, W_max, capacity) block so the whole
-    fleet transfers to device as five arrays, not five per sensor.
-    Returns ``(starts, stops, t_start, overflow)``.
+    fleet transfers to device as five arrays, not five per sensor. The
+    destination planes are either five positional arrays or one
+    ``out=(bx, by, bt, bp, bv)`` tuple — the form the fleet's reusable
+    staging buffers hand over, so a pipelined round packs in place with
+    zero per-round allocation. Returns ``(starts, stops, t_start,
+    overflow)``.
     """
+    if out is not None:
+        if bx is not None:
+            raise TypeError("pass destination planes positionally OR as out=")
+        bx, by, bt, bp, bv = out
+    if bx is None or by is None or bt is None or bp is None or bv is None:
+        raise TypeError("five destination planes required (positional or out=)")
     w = len(bounds)
     cap = bx.shape[-1]
     if w == 1:

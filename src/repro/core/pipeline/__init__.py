@@ -63,6 +63,7 @@ from repro.core.pipeline.fleet import (  # noqa: F401
     FleetPipeline,
     FleetResult,
     FleetState,
+    PendingRound,
     SensorCursor,
     make_fleet_fn,
     tier_capacity,

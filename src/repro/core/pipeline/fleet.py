@@ -98,6 +98,13 @@ DEFAULT_TIERS = (4, 8, 16, 32, 64)
 STEP_TRACES: list[tuple[int, int, int, bool]] = []
 
 
+# Staging sets kept alive per packed-block shape: churny services visit a
+# handful of (S, W, cap) shapes; beyond this the least recently used
+# ring's buffers are dropped (they are plain numpy arrays — any round
+# still in flight keeps its own device copies and bookkeeping copies).
+_MAX_STAGING_SHAPES = 8
+
+
 def tier_capacity(n: int, tiers: tuple[int, ...] = DEFAULT_TIERS) -> int:
     """Smallest tier capacity holding ``n`` slots (doubling past the end)."""
     if n < 1:
@@ -252,6 +259,7 @@ class FleetResult:
     _with_tracking: bool
     _carry_tracks: TrackState  # (S, T) carry after this feed (empty-feed path)
     _host: tuple | None = None  # numpy copy of the stacked leaves, on demand
+    _hot_rows: dict | None = None  # slot -> row into the gathered host leaves
 
     @property
     def n_sensors(self) -> int:
@@ -271,13 +279,73 @@ class FleetResult:
         ``sensor(s)`` call pure numpy views. Values are the same bits, so
         the bit-identity contract is untouched; the device-resident
         stacked attributes stay as they were for O(1)-dispatch consumers.
+
+        When most slots closed no window this feed — a sparsely occupied
+        slot pool, the steady churny-service shape — copying the full
+        (S, W, ...) leaves bills every padding row. Instead the hot rows
+        (``n_windows > 0``) are gathered device-side (one fused take per
+        leaf) and only those cross to host; ``sensor(s)`` maps its slot
+        through ``_hot_rows``. A slot with zero windows trims ``[:0]``
+        from row 0, which yields the same empty arrays the full copy
+        would. ``final_tracks`` is every slot's carry — idle slots
+        included — so it always crosses in full.
         """
         if self._host is None:
-            self._host = jax.tree.map(
-                np.asarray,
-                (self.clusters, self.metrics, self.tracks, self.final_tracks),
-            )
+            s_count = len(self.windows)
+            hot = np.flatnonzero(np.asarray(self.n_windows) > 0)
+            if 2 * len(hot) >= s_count:
+                # Mostly-hot fleet: plain per-leaf transfers beat the
+                # extra gather dispatch per leaf.
+                self._host = jax.tree.map(
+                    np.asarray,
+                    (self.clusters, self.metrics, self.tracks,
+                     self.final_tracks),
+                )
+                self._hot_rows = None
+            else:
+                if jax.default_backend() == "cpu":
+                    # Host memory IS device memory: np.asarray is a
+                    # zero-copy view, so "transfer only the hot rows"
+                    # means one numpy fancy-index per leaf (copies just
+                    # those rows, and releases the full (S, W, ...)
+                    # stacked buffers a long-held view would pin). A
+                    # device-side gather here would cost a dispatched
+                    # computation per leaf — measured ~90x the full view
+                    # in benchmarks/serve_latency.py.
+                    gather = lambda a: np.asarray(a)[hot]
+                else:
+                    # Separate device memory: gather on device so only
+                    # the valid-window rows cross the wire.
+                    idx = jnp.asarray(hot)
+                    gather = lambda a: np.asarray(a[idx])
+                self._host = (
+                    jax.tree.map(gather, self.clusters),
+                    jax.tree.map(gather, self.metrics),
+                    jax.tree.map(gather, self.tracks),
+                    jax.tree.map(np.asarray, self.final_tracks),
+                )
+                self._hot_rows = {int(s): i for i, s in enumerate(hot)}
         return self._host
+
+    def ready(self) -> bool:
+        """True when the device step behind this feed has completed (its
+        output buffers are materialized). Host views never block once
+        this holds."""
+        if self.clusters is None:
+            return True
+        return all(
+            getattr(leaf, "is_ready", lambda: True)()
+            for leaf in jax.tree.leaves(
+                (self.clusters, self.metrics, self.tracks, self.final_tracks)
+            )
+        )
+
+    def block_until_ready(self) -> "FleetResult":
+        if self.clusters is not None:
+            jax.block_until_ready(
+                (self.clusters, self.metrics, self.tracks, self.final_tracks)
+            )
+        return self
 
     def sensor(self, s: int) -> ScanResult:
         """Trimmed per-sensor result, bit-identical to the equivalent
@@ -288,7 +356,8 @@ class FleetResult:
             carry_s = jax.tree.map(lambda a: a[s], self._carry_tracks)
             return empty_scan_result(self._config, self._with_tracking, carry_s, w)
         clusters_h, mets_h, tracks_h, final_h = self._host_view()
-        trim = lambda a: a[s, :n]
+        row = s if self._hot_rows is None else self._hot_rows.get(s, 0)
+        trim = lambda a: a[row, :n]
         clusters = jax.tree.map(trim, clusters_h)
         mets = {k: trim(v) for k, v in mets_h.items()}
         return ScanResult(
@@ -306,6 +375,98 @@ class FleetResult:
 
     def results(self) -> list[ScanResult]:
         return [self.sensor(s) for s in range(self.n_sensors)]
+
+
+@dataclasses.dataclass
+class PendingRound:
+    """Handle to one dispatched (possibly still executing) fleet round.
+
+    :meth:`FleetPipeline.feed_async` dispatches the jitted step and
+    returns immediately — JAX async dispatch means the returned arrays
+    are futures. The handle makes the pipeline explicit: :meth:`ready`
+    polls the device without blocking, :meth:`wait` synchronizes, and
+    :meth:`result` hands back the :class:`FleetResult` without forcing
+    either (its host views synchronize lazily at first consumption, so N
+    in-flight rounds consumed together cost one sync, not N).
+    """
+
+    _result: FleetResult
+
+    def ready(self) -> bool:
+        """Poll: has the device step behind this round completed?"""
+        return self._result.ready()
+
+    def wait(self) -> FleetResult:
+        """Block until the round's device buffers are materialized."""
+        return self._result.block_until_ready()
+
+    def result(self) -> FleetResult:
+        """The round's result; does not block (host views are lazy)."""
+        return self._result
+
+    @property
+    def n_windows(self) -> np.ndarray:
+        """(S,) windows closed this round — host data, never blocks."""
+        return self._result.n_windows
+
+    @property
+    def total_windows(self) -> int:
+        return self._result.total_windows
+
+
+class _StagingSet:
+    """One preallocated host-side staging buffer set for a packed-block
+    shape: the (4, S, W, cap) event planes, the (S, W, cap) validity
+    mask, and the (2, S) tag/n_valid meta rows. ``inflight`` is the
+    round currently borrowing the buffers (its transfer must complete —
+    gated on the round's *outputs*, see :class:`_StagingPool` — before
+    they are refilled)."""
+
+    __slots__ = ("packed", "valid", "meta", "inflight")
+
+    def __init__(self, s: int, w: int, cap: int):
+        self.packed = np.zeros((4, s, w, cap), np.int32)
+        self.valid = np.zeros((s, w, cap), bool)
+        self.meta = np.zeros((2, s), np.int32)
+        self.inflight: PendingRound | None = None
+
+
+class _StagingPool:
+    """Depth-deep ring of reusable staging sets per packed-block shape.
+
+    Double buffering (``depth=2``) lets round N+1 pack on host while
+    round N computes on device: the two rounds use disjoint buffer sets,
+    and acquiring a set whose borrower is still executing blocks until
+    that round's outputs are ready. Outputs-ready is the conservative
+    reuse gate — the step cannot have finished without having consumed
+    its inputs, so refilling the numpy planes can never race the
+    host->device transfer even if the runtime aliased them. Rings are
+    kept per shape with LRU eviction past ``_MAX_STAGING_SHAPES``.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"staging depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._rings: dict[tuple[int, int, int], list] = {}  # key -> [ix, sets]
+
+    def acquire(self, s: int, w: int, cap: int) -> _StagingSet:
+        key = (s, w, cap)
+        ring = self._rings.pop(key, None)
+        if ring is None:
+            ring = [0, [_StagingSet(s, w, cap) for _ in range(self.depth)]]
+        self._rings[key] = ring  # reinsert: dict order is the LRU order
+        while len(self._rings) > _MAX_STAGING_SHAPES:
+            self._rings.pop(next(iter(self._rings)))
+        ix, sets = ring
+        ring[0] = (ix + 1) % self.depth
+        st = sets[ix]
+        if st.inflight is not None:
+            st.inflight.wait()
+            st.inflight = None
+        st.packed.fill(0)
+        st.valid.fill(0)
+        return st
 
 
 class FleetPipeline:
@@ -336,6 +497,14 @@ class FleetPipeline:
     step variant — dynamic-membership callers (the detection service)
     use it to pin compiles to exactly one step shape per (capacity,
     window-count) instead of two.
+
+    ``feed`` dispatches asynchronously (the returned result's host views
+    synchronize lazily); :meth:`feed_async` exposes the same round as an
+    explicit :class:`PendingRound` handle so a pipelined caller can keep
+    several rounds in flight and poll/await them. Host packing writes
+    into ``staging_depth`` preallocated staging buffer sets per packed
+    shape (double buffering by default) instead of allocating per round;
+    a set is refilled only after the round borrowing it has completed.
     """
 
     def __init__(
@@ -346,6 +515,7 @@ class FleetPipeline:
         mesh=None,
         state: FleetState | None = None,
         uniform_fast_path: bool = True,
+        staging_depth: int = 2,
     ):
         if n_sensors < 1:
             raise ValueError(f"n_sensors must be >= 1, got {n_sensors}")
@@ -356,6 +526,7 @@ class FleetPipeline:
         self.uniform_fast_path = uniform_fast_path
         self._step = make_fleet_fn(config, with_tracking)
         self._tag_limit = tag_limit(config)
+        self._staging = _StagingPool(staging_depth)
         self.state = self.init_state() if state is None else state
         if state is not None and state.n_sensors != n_sensors:
             raise ValueError(
@@ -392,17 +563,30 @@ class FleetPipeline:
         masked slots are force-closed this feed (sensor detach) while
         the rest keep batching normally.
         """
+        return self._ingest(chunks, final=final).result()
+
+    def feed_async(self, chunks, final=False) -> PendingRound:
+        """:meth:`feed`, as an explicit pipelined round: the jitted step
+        is dispatched without synchronizing and a :class:`PendingRound`
+        handle is returned. Validation errors still raise here, at the
+        dispatch boundary, before any state mutation — a raised feed
+        leaves the fleet untouched and re-feedable, exactly like the
+        synchronous path. Rounds complete in dispatch order (one device
+        stream), so interleaving ``feed_async`` with ``reset_slots`` /
+        ``grow`` / ``shrink`` is safe: an earlier round's outputs are
+        never perturbed by later carry surgery (outputs are not donated).
+        """
         return self._ingest(chunks, final=final)
 
     def flush(self) -> FleetResult:
         """Force-close every sensor's trailing partial window."""
-        return self._ingest([None] * self.n_sensors, final=True)
+        return self._ingest([None] * self.n_sensors, final=True).result()
 
     def flush_slots(self, slots) -> FleetResult:
         """Force-close the trailing partial window of ``slots`` only."""
         final = np.zeros(self.n_sensors, bool)
         final[list(slots)] = True
-        return self._ingest([None] * self.n_sensors, final=final)
+        return self._ingest([None] * self.n_sensors, final=final).result()
 
     def reset_slots(self, slots) -> None:
         """Zero the named slots' carries (cursor + atlas slice + tracker
@@ -494,7 +678,7 @@ class FleetPipeline:
             cursors=st.cursors[:new_capacity], atlas=atlas, tracks=tracks
         )
 
-    def _ingest(self, chunks, final) -> FleetResult:
+    def _ingest(self, chunks, final) -> PendingRound:
         st = self.state
         s_count = st.n_sensors
         if len(chunks) != s_count:
@@ -536,11 +720,19 @@ class FleetPipeline:
 
         # Phase B (infallible): pack all sensors into one (4, S, W_max,
         # cap) x/y/t/p block (single host->device transfer), resolve
-        # tags/rollover, commit cursors.
+        # tags/rollover, commit cursors. The block lives in a reusable
+        # staging set (acquire blocks iff the set's previous borrower is
+        # still executing — the pipelined-depth backpressure point), so
+        # the steady state allocates nothing per round.
         cap = batcher.capacity
-        packed = np.zeros((4, s_count, w_max, cap), np.int32)
-        bx, by, bt, bp = packed
-        bv = np.zeros((s_count, w_max, cap), bool)
+        staging = (
+            self._staging.acquire(s_count, w_max, cap) if w_max else None
+        )
+        if staging is None:
+            bx = by = bt = bp = bv = None
+        else:
+            bx, by, bt, bp = staging.packed
+            bv = staging.valid
         tag0 = np.zeros(s_count, np.int32)
         reset = np.zeros(s_count, bool)
         windows_list: list[WindowedEvents] = []
@@ -549,19 +741,31 @@ class FleetPipeline:
         ):
             mt = merged[2]
             bounds3 = [(a, b, int(mt[a])) for a, b in bounds]
-            starts, stops, t_start, overflow = pack_bounds_into(
-                *merged, bounds3, bx[s], by[s], bt[s], bp[s], bv[s]
-            )
+            if staging is None:
+                starts = stops = t_start = np.zeros(0, np.int64)
+                overflow = np.zeros(0, np.int64)
+                zeros = np.zeros((0, cap), np.int32)
+                row = EventBatch(
+                    zeros, zeros, zeros, zeros, np.zeros((0, cap), bool)
+                )
+            else:
+                starts, stops, t_start, overflow = pack_bounds_into(
+                    *merged, bounds3, out=(bx[s], by[s], bt[s], bp[s], bv[s])
+                )
+                n = len(bounds)
+                # Per-sensor bookkeeping rows are COPIES of the packed
+                # rows, not views: the staging planes are refilled two
+                # rounds later, but the WindowedEvents a caller holds
+                # must stay stable for the round's lifetime.
+                row = EventBatch(
+                    bx[s, :n].copy(), by[s, :n].copy(), bt[s, :n].copy(),
+                    bp[s, :n].copy(), bv[s, :n].copy(),
+                )
             n = len(bounds)
             base = cur.events_consumed
-            # Per-sensor bookkeeping view over the packed block: numpy
-            # rows, stream-global slice indices (like StreamState feeds).
             windows_list.append(
                 WindowedEvents(
-                    EventBatch(
-                        bx[s, :n], by[s, :n], bt[s, :n], bp[s, :n], bv[s, :n]
-                    ),
-                    t_start, starts + base, stops + base, overflow,
+                    row, t_start, starts + base, stops + base, overflow
                 )
             )
             t0 = cur.next_tag
@@ -574,28 +778,29 @@ class FleetPipeline:
             cur.last_t = int(mt[-1]) if len(mt) else cur.last_t
 
         if w_max == 0:
-            return FleetResult(
+            return PendingRound(FleetResult(
                 n_windows=n_valid,
                 windows=windows_list,
                 clusters=None, metrics=None, tracks=None, final_tracks=None,
                 _config=self.config,
                 _with_tracking=self.with_tracking,
                 _carry_tracks=st.tracks,
-            )
+            ))
 
+        staging.meta[0] = tag0
+        staging.meta[1] = n_valid
         with self._mesh_ctx():
             atlas_in = st.atlas
             if reset.any():  # rare: tag-epoch rollover on some sensor(s)
                 atlas_in = _zero_sensors_fn()(atlas_in, jnp.asarray(reset))
             final_tracks, clusters, mets, states, atlas = self._step(
-                packed, bv, st.tracks, atlas_in,
-                np.stack([tag0, n_valid.astype(np.int32)]),
+                staging.packed, bv, st.tracks, atlas_in, staging.meta,
                 self.uniform_fast_path and bool((n_valid == w_max).all()),
             )
         self.state = FleetState(
             cursors=st.cursors, atlas=atlas, tracks=final_tracks
         )
-        return FleetResult(
+        pending = PendingRound(FleetResult(
             n_windows=n_valid,
             windows=windows_list,
             clusters=clusters,
@@ -605,4 +810,6 @@ class FleetPipeline:
             _config=self.config,
             _with_tracking=self.with_tracking,
             _carry_tracks=final_tracks,
-        )
+        ))
+        staging.inflight = pending
+        return pending

@@ -18,7 +18,14 @@ import jax.numpy as jnp
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8. Returns (q, scale)."""
+    """Symmetric per-tensor int8. Returns (q, scale).
+
+    An empty tensor (a zero-size gradient leaf, legal in a pytree)
+    quantizes to an empty int8 payload with unit scale — ``jnp.max``
+    over zero elements is undefined, so it is never reached.
+    """
+    if x.size == 0:
+        return x.astype(jnp.int8), jnp.ones((), jnp.float32)
     amax = jnp.max(jnp.abs(x))
     scale = jnp.maximum(amax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)

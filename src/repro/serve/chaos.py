@@ -152,10 +152,11 @@ class _Stream:
 
 
 class _FlakyFleet:
-    """Transparent fleet wrapper whose ``feed`` raises the next
-    ``fail_next`` times — the chaos stand-in for a device-step failure
-    at the dispatch boundary (before any fleet mutation, which is where
-    a failed XLA dispatch surfaces)."""
+    """Transparent fleet wrapper whose ``feed`` / ``feed_async`` raise
+    the next ``fail_next`` times — the chaos stand-in for a device-step
+    failure at the dispatch boundary (before any fleet mutation, which
+    is where a failed XLA dispatch surfaces; the service's retry loop
+    wraps ``feed_async``)."""
 
     def __init__(self, fleet):
         self._fleet = fleet
@@ -165,12 +166,19 @@ class _FlakyFleet:
     def __getattr__(self, name):
         return getattr(self._fleet, name)
 
-    def feed(self, *args, **kwargs):
+    def _maybe_fail(self):
         if self.fail_next > 0:
             self.fail_next -= 1
             self.raised += 1
             raise RuntimeError("chaos: injected device-step failure")
+
+    def feed(self, *args, **kwargs):
+        self._maybe_fail()
         return self._fleet.feed(*args, **kwargs)
+
+    def feed_async(self, *args, **kwargs):
+        self._maybe_fail()
+        return self._fleet.feed_async(*args, **kwargs)
 
 
 def _result_arrays(res) -> list[np.ndarray]:

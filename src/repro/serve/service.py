@@ -50,7 +50,12 @@ from typing import Callable
 import numpy as np
 
 from repro.core.pipeline.config import PipelineConfig
-from repro.core.pipeline.fleet import DEFAULT_TIERS, FleetPipeline, tier_capacity
+from repro.core.pipeline.fleet import (
+    DEFAULT_TIERS,
+    FleetPipeline,
+    PendingRound,
+    tier_capacity,
+)
 from repro.core.pipeline.scan import ScanResult
 from repro.serve.batcher import AdmissionConfig, DualThresholdAdmitter
 from repro.serve.faults import FaultConfig, SessionHealth
@@ -66,11 +71,34 @@ from repro.serve.sessions import (
 
 @dataclasses.dataclass
 class ServedFeed:
-    """One session's share of one fleet step."""
+    """One session's share of one fleet step.
+
+    ``result`` is lazy: the fleet round behind it was dispatched
+    asynchronously, and the per-sensor :class:`ScanResult` materializes
+    (synchronizing with the device if needed) the first time it is read.
+    Consuming several feeds from several in-flight rounds together costs
+    one sync, not one per round — the pipelined-ingest contract
+    (DESIGN.md Sec. 14). Everything else (``sid``, ``latency_ms``,
+    ``num_windows``) is host data, readable without blocking.
+    """
 
     sid: int
-    result: ScanResult
-    latency_ms: float  # oldest queued chunk's arrival -> results ready
+    latency_ms: float  # oldest queued chunk's arrival -> round dispatched
+    _round: PendingRound = dataclasses.field(repr=False)
+    _slot: int = dataclasses.field(repr=False)
+    _result: ScanResult | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def num_windows(self) -> int:
+        """Windows this step closed for the session (never blocks)."""
+        return int(self._round.n_windows[self._slot])
+
+    @property
+    def result(self) -> ScanResult:
+        """The session's trimmed result (materializes on first read)."""
+        if self._result is None:
+            self._result = self._round.result().sensor(self._slot)
+        return self._result
 
 
 class DetectionService:
@@ -96,6 +124,19 @@ class DetectionService:
     heartbeat eviction / step-retry policies explicitly. ``sleep`` is
     the retry-backoff sleeper (injectable so tests and the chaos
     harness never really sleep).
+
+    ``max_inflight_rounds`` is the ingest pipeline depth (DESIGN.md
+    Sec. 14). The default 1 is the synchronous path: every round is
+    awaited before ``_step`` returns, exactly the pre-pipelining
+    behaviour. Depth N > 1 keeps up to N dispatched rounds in flight —
+    host packing of the next round overlaps device compute of the
+    previous ones — and an admission-triggered round arriving while the
+    pipeline is full is *deferred* (queues intact, admission state
+    untouched, per-session ``deferred_rounds`` incremented) rather than
+    blocking the feed caller; ``pump(force=True)`` and detach/evict
+    flushes instead apply backpressure by retiring the oldest round.
+    Outputs are bit-identical at every depth for any chunking/churn
+    schedule.
     """
 
     def __init__(
@@ -108,14 +149,20 @@ class DetectionService:
         mesh=None,
         clock: Callable[[], float] = time.monotonic,
         sleep: Callable[[float], None] = time.sleep,
+        max_inflight_rounds: int = 1,
     ):
         if not tiers or list(tiers) != sorted(set(tiers)):
             raise ValueError(f"tiers must be strictly increasing, got {tiers}")
+        if max_inflight_rounds < 1:
+            raise ValueError(
+                f"max_inflight_rounds must be >= 1, got {max_inflight_rounds}"
+            )
         self.config = config
         self.tiers = tuple(int(t) for t in tiers)
         self.faults = faults
         self.clock = clock
         self._sleep = sleep
+        self.max_inflight_rounds = max_inflight_rounds
         self._admit: DualThresholdAdmitter[int] = DualThresholdAdmitter(
             admission, clock
         )
@@ -126,10 +173,15 @@ class DetectionService:
             with_tracking=with_tracking,
             mesh=mesh,
             uniform_fast_path=False,  # compile discipline (module docstring)
+            # One spare staging set beyond the deepest in-flight window,
+            # so packing round N never waits on a buffer still borrowed
+            # by an unretired round.
+            staging_depth=max(2, max_inflight_rounds),
         )
         self._sessions: dict[int, SensorSession] = {}  # all states
         self._by_slot: dict[int, int] = {}  # slot -> sid, live only
         self._free: list[int] = list(range(self.tiers[0]))  # sorted
+        self._inflight: list[PendingRound] = []  # dispatched, unretired
         self._next_sid = 0
         self.promotions = 0  # capacity-tier promotions performed
         self.demotions = 0  # capacity-tier demotions performed
@@ -137,6 +189,7 @@ class DetectionService:
         self.evictions = 0  # sessions evicted (heartbeat deadline)
         self.degraded_rounds = 0  # fleet rounds failed + restored
         self.step_retries = 0  # fleet step retries performed
+        self.deferred_rounds = 0  # admission rounds deferred, pipeline full
         self.errors: list[SessionError] = []  # service-wide fault log
 
     # ------------------------------------------------------------------
@@ -251,16 +304,31 @@ class DetectionService:
             self._admit.submit(sid, weight=n)
         self._sweep_liveness()
         if sess.state == LIVE and self._admit.ready():
-            return self.pump(force=True)
+            return self.pump()
         return []
 
     def pump(self, force: bool = False) -> list[ServedFeed]:
         """Run one fleet step over every queued chunk (if admission fired
         or ``force``). Results are delivered per session, slot-ordered.
         Sweeps heartbeat eviction first; a degraded round (step failed
-        after retries) returns ``[]`` with every chunk restored."""
+        after retries) returns ``[]`` with every chunk restored.
+
+        With ``max_inflight_rounds > 1`` an admission-triggered round
+        that arrives while the pipeline is full (every in-flight slot
+        taken, oldest still executing) is deferred: nothing is taken
+        from any queue, the admitter keeps its state so the next pump
+        retries, and the deferral is accounted per queued session.
+        ``force=True`` never defers — it applies backpressure by
+        retiring the oldest round instead (drain semantics)."""
         self._sweep_liveness()
         if not force and not self._admit.ready():
+            return []
+        if not force and not self._dispatch_ready():
+            self.deferred_rounds += 1
+            for sid in self._by_slot.values():
+                sess = self._sessions[sid]
+                if sess.queued_events:
+                    sess.stats.deferred_rounds += 1
             return []
         self._admit.pop_all()
         dirty = [
@@ -272,6 +340,18 @@ class DetectionService:
             return []
         out = self._step({slot: sid for slot, sid in dirty}, final_slots=())
         return [] if out is None else out
+
+    @property
+    def inflight_rounds(self) -> int:
+        """Dispatched fleet rounds not yet retired (<= max_inflight_rounds)."""
+        return len(self._inflight)
+
+    def drain(self) -> None:
+        """Retire every in-flight round (block until the device is idle).
+
+        Deferred micro-batches are NOT stepped — call ``pump(force=True)``
+        first to flush queues; ``drain`` only empties the pipeline."""
+        self._retire(0)
 
     def detach(self, sid: int) -> ScanResult:
         """Close a session: its queued chunks and trailing partial window
@@ -383,19 +463,42 @@ class DetectionService:
             raise RuntimeError(f"session {sid} is {sess.state}")
         return sess
 
+    def _dispatch_ready(self) -> bool:
+        """Can a new round be dispatched without blocking on the device?"""
+        return (
+            len(self._inflight) < self.max_inflight_rounds
+            or self._inflight[0].ready()
+        )
+
+    def _retire(self, keep: int) -> None:
+        """Await the oldest in-flight rounds until at most ``keep`` remain."""
+        while len(self._inflight) > keep:
+            self._inflight.pop(0).wait()
+
     def _step(
         self, by_slot: dict[int, int], final_slots: tuple[int, ...]
     ) -> list[ServedFeed] | None:
-        """One fleet step over the named slots' merged queues.
+        """One fleet step over the named slots' merged queues, dispatched
+        asynchronously into the in-flight window.
 
-        A step that raises is retried up to ``max_step_retries`` times
-        with exponential backoff (the fleet validates before mutating,
-        so a failed dispatch leaves the carry untouched and the same
-        chunks re-feed exactly). When retries are exhausted: with
+        A dispatch that raises is retried up to ``max_step_retries``
+        times with exponential backoff (the fleet validates before
+        mutating — phase A — so a failed dispatch leaves the carry
+        untouched and the same chunks re-feed exactly; this is the
+        boundary where chunk-induced faults surface even with rounds
+        already in flight, since earlier rounds' outputs are never
+        donated). When retries are exhausted: with
         ``degrade_on_step_failure`` every taken chunk is restored to its
         session queue (original arrival stamps — nothing lost, latency
         clocks intact), the round is recorded degraded, and ``None`` is
         returned; otherwise the last error propagates (strict default).
+
+        Before dispatching, the oldest in-flight rounds are retired down
+        to ``max_inflight_rounds - 1`` (backpressure); at depth 1 the
+        new round is also awaited before returning — the synchronous
+        path. Per-session accounting (steps, windows, latency, health)
+        happens at dispatch from host-side window counts, so counters
+        are exact regardless of when results are consumed.
         """
         chunks: list = [None] * self.capacity
         arrivals: dict[int, float | None] = {}
@@ -404,10 +507,11 @@ class DetectionService:
         final = np.zeros(self.capacity, bool)
         if final_slots:
             final[list(final_slots)] = True
-        out = None
+        self._retire(self.max_inflight_rounds - 1)
+        pending = None
         for attempt in range(self.faults.max_step_retries + 1):
             try:
-                out = self._fleet.feed(chunks, final=final)
+                pending = self._fleet.feed_async(chunks, final=final)
                 break
             except Exception as e:  # noqa: BLE001 — device-step failure
                 last_err = e
@@ -419,7 +523,7 @@ class DetectionService:
                 backoff = self.faults.retry_backoff_s * (2**attempt)
                 if backoff:
                     self._sleep(backoff)
-        if out is None:
+        if pending is None:
             self.degraded_rounds += 1
             for slot, sid in by_slot.items():
                 sess = self._sessions[sid]
@@ -436,18 +540,23 @@ class DetectionService:
                     )
                 )
             return None
+        self._inflight.append(pending)
         now = self.clock()
         served: list[ServedFeed] = []
         for slot in sorted(by_slot):
             sid = by_slot[slot]
             sess = self._sessions[sid]
-            result = out.sensor(slot)
             arrival = arrivals[sid]
             latency_ms = None if arrival is None else (now - arrival) * 1e3
-            sess.record_step(result.num_windows, latency_ms)
+            sess.record_step(int(pending.n_windows[slot]), latency_ms)
             if latency_ms is not None:
                 self._health.note_latency(sid, latency_ms)
             served.append(
-                ServedFeed(sid=sid, result=result, latency_ms=latency_ms or 0.0)
+                ServedFeed(
+                    sid=sid, latency_ms=latency_ms or 0.0,
+                    _round=pending, _slot=slot,
+                )
             )
+        if self.max_inflight_rounds == 1:
+            self._retire(0)  # synchronous path: round awaited before return
         return served

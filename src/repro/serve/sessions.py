@@ -93,6 +93,12 @@ class SessionStats:
     shed_chunks: int = 0  # whole chunks shed (reject) or dropped (drop_oldest)
     validation_failures: int = 0  # chunks refused by validate/range checks
     degraded_rounds: int = 0  # fleet rounds that failed + restored this queue
+    # Admission rounds deferred while this session had queued data because
+    # the ingest pipeline was full (max_inflight_rounds reached, oldest
+    # round still executing). Deferral is backpressure, not loss: the
+    # queue and the admitter state are untouched, so the events ride the
+    # next dispatched round and offered == events + shed stays exact.
+    deferred_rounds: int = 0
     steps: int = 0  # fleet steps this session's chunks rode in
     windows: int = 0  # windows closed and returned to the session
     latency_ms: list[float] = dataclasses.field(default_factory=list)

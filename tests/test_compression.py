@@ -1,0 +1,230 @@
+"""Unit suite for repro.distributed.compression vs numpy oracles.
+
+The compression module is the wire layer the constellation-scale item
+builds on (ROADMAP: compressed cross-shard result exchange), so its
+numerics are pinned here before anything depends on them:
+
+* quantize/dequantize roundtrips against a plain-numpy oracle, with the
+  analytic error bound (|x - deq| <= scale/2 inside the clip range);
+* empty tensors and dtype edges (float16 / bfloat16 / scalar / int32);
+* error feedback: one EF step's corrected gradient + residual exactly
+  reconstructs the input, and the residual shrinks the next step's bias;
+* the collectives (compressed_psum_int8, dp_grad_sync_int8,
+  ring_allreduce_int8) under ``jax.vmap(axis_name=...)`` — the
+  single-device stand-in for a mesh axis — against the fp32 mean.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (
+    compressed_psum_int8,
+    dequantize_int8,
+    dp_grad_sync_int8,
+    ef_int8_roundtrip,
+    quantize_int8,
+    ring_allreduce_int8,
+)
+
+
+def _np_quantize(x: np.ndarray) -> tuple[np.ndarray, float]:
+    """Numpy oracle of the symmetric per-tensor int8 quantizer."""
+    amax = np.max(np.abs(x)) if x.size else 0.0
+    scale = max(amax, 1e-12) / 127.0
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(64,), (7, 5), (1,), (3, 1, 4)])
+def test_quantize_matches_numpy_oracle(shape):
+    x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+    q, scale = quantize_int8(jnp.asarray(x))
+    oq, oscale = _np_quantize(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), oq)
+    assert float(scale) == pytest.approx(oscale, rel=1e-6)
+
+
+def test_roundtrip_error_bound():
+    """|x - dequantize(quantize(x))| <= scale/2 everywhere (symmetric
+    rounding; amax maps exactly to +-127 so nothing clips)."""
+    x = np.random.default_rng(1).normal(size=4096).astype(np.float32) * 3.0
+    q, scale = quantize_int8(jnp.asarray(x))
+    deq = np.asarray(dequantize_int8(q, scale))
+    assert np.max(np.abs(x - deq)) <= float(scale) / 2 + 1e-7
+
+
+def test_roundtrip_exact_on_grid():
+    """Values already on the quantization grid survive bit-exactly."""
+    scale = 0.5
+    x = (np.arange(-127, 128, dtype=np.float32)) * scale
+    q, s = quantize_int8(jnp.asarray(x))
+    np.testing.assert_allclose(
+        np.asarray(dequantize_int8(q, s)), x, rtol=0, atol=1e-6
+    )
+
+
+def test_quantize_zero_tensor():
+    q, scale = quantize_int8(jnp.zeros(16))
+    np.testing.assert_array_equal(np.asarray(q), np.zeros(16, np.int8))
+    assert float(scale) > 0  # 1e-12 floor, never a 0/0
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8(q, scale)), np.zeros(16, np.float32)
+    )
+
+
+def test_quantize_empty_tensor():
+    """Zero-size gradient leaves are legal; jnp.max over them is not."""
+    q, scale = quantize_int8(jnp.zeros((0,)))
+    assert q.shape == (0,) and q.dtype == jnp.int8
+    deq = dequantize_int8(q, scale)
+    assert deq.shape == (0,) and deq.dtype == jnp.float32
+    q2, _ = quantize_int8(jnp.zeros((3, 0, 5)))
+    assert q2.shape == (3, 0, 5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float16, jnp.bfloat16, jnp.float32])
+def test_quantize_dtype_edges(dtype):
+    x = jnp.asarray([-1.0, -0.25, 0.0, 0.5, 1.0], dtype)
+    q, scale = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    deq = np.asarray(dequantize_int8(q, scale), np.float32)
+    np.testing.assert_allclose(
+        deq, np.asarray(x, np.float32), atol=float(scale) / 2 + 1e-3
+    )
+
+
+def test_quantize_scalar_and_int_input():
+    q, scale = quantize_int8(jnp.asarray(2.5))
+    assert np.asarray(q) == 127  # amax maps to full scale
+    assert float(dequantize_int8(q, scale)) == pytest.approx(2.5, rel=1e-6)
+    qi, si = quantize_int8(jnp.asarray([-3, 0, 7], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(qi), [-54, 0, 127])
+
+
+def test_quantize_under_jit():
+    x = jnp.linspace(-1, 1, 33)
+    q_eager, s_eager = quantize_int8(x)
+    q_jit, s_jit = jax.jit(quantize_int8)(x)
+    np.testing.assert_array_equal(np.asarray(q_eager), np.asarray(q_jit))
+    assert float(s_eager) == pytest.approx(float(s_jit), rel=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback.
+# ---------------------------------------------------------------------------
+
+
+def test_ef_roundtrip_reconstructs_input():
+    """corrected == deq + residual exactly: g + ef = deq + new_ef."""
+    rng = np.random.default_rng(2)
+    grads = {
+        "w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=4).astype(np.float32)),
+    }
+    out, state = ef_int8_roundtrip(grads, {})
+    for k in grads:
+        lhs = np.asarray(grads[k])
+        rhs = np.asarray(out[k]) + np.asarray(state["ef"][k])
+        np.testing.assert_allclose(lhs, rhs, atol=1e-6)
+
+
+def test_ef_residual_bounded_and_carried():
+    rng = np.random.default_rng(3)
+    g = {"w": jnp.asarray(rng.normal(size=256).astype(np.float32))}
+    out1, state1 = ef_int8_roundtrip(g, {})
+    _, scale = quantize_int8(g["w"])
+    assert np.max(np.abs(np.asarray(state1["ef"]["w"]))) <= float(scale)
+    # Second step carries the residual: the EF buffer changes.
+    out2, state2 = ef_int8_roundtrip(g, state1)
+    assert not np.array_equal(
+        np.asarray(state1["ef"]["w"]), np.asarray(state2["ef"]["w"])
+    )
+    # Averaged over the two steps, EF keeps the mean error at one
+    # quantization step of the truth (the EF-SGD unbiasedness argument).
+    mean_out = (np.asarray(out1["w"]) + np.asarray(out2["w"])) / 2
+    assert np.max(np.abs(mean_out - np.asarray(g["w"]))) <= float(scale)
+
+
+# ---------------------------------------------------------------------------
+# Collectives under vmap(axis_name=...) — the single-device mesh axis.
+# ---------------------------------------------------------------------------
+
+N_SHARDS = 4
+
+
+def _shards(seed: int, shape) -> np.ndarray:
+    return (
+        np.random.default_rng(seed)
+        .normal(size=(N_SHARDS,) + shape)
+        .astype(np.float32)
+    )
+
+
+def test_compressed_psum_matches_fp32_mean():
+    x = _shards(4, (128,))
+    out = jax.vmap(
+        lambda v: compressed_psum_int8(v, "shard"), axis_name="shard"
+    )(jnp.asarray(x))
+    want = x.mean(axis=0)
+    # Every shard sees the same reduced tensor, within quantization error
+    # of the true mean (max per-shard scale bounds the per-term error).
+    scales = np.abs(x).max(axis=1) / 127.0
+    tol = scales.max() + 1e-6
+    for s in range(N_SHARDS):
+        np.testing.assert_allclose(np.asarray(out[s]), want, atol=tol)
+    assert np.asarray(out).std(axis=0).max() < 1e-7  # shards agree exactly
+
+
+def test_dp_grad_sync_tree():
+    tree = {
+        "w": jnp.asarray(_shards(5, (16, 3))),
+        "b": jnp.asarray(_shards(6, (3,))),
+    }
+    out = jax.vmap(
+        lambda g: dp_grad_sync_int8(g, "shard"), axis_name="shard"
+    )(tree)
+    for k, v in tree.items():
+        want = np.asarray(v).mean(axis=0)
+        tol = np.abs(np.asarray(v)).max() / 127.0 + 1e-6
+        np.testing.assert_allclose(np.asarray(out[k][0]), want, atol=tol)
+
+
+@pytest.mark.parametrize("n", [64, 63, 1])  # 63, 1: padding path
+def test_ring_allreduce_matches_psum_mean(n):
+    x = _shards(7, (n,))
+    out = jax.vmap(
+        lambda v: ring_allreduce_int8(v, "shard", N_SHARDS),
+        axis_name="shard",
+    )(jnp.asarray(x))
+    want = x.mean(axis=0)
+    tol = np.abs(x).max() / 127.0 * 1.5 + 1e-6  # int16 partial sums, one scale
+    for s in range(N_SHARDS):
+        assert np.asarray(out[s]).shape == (n,)
+        np.testing.assert_allclose(np.asarray(out[s]), want, atol=tol)
+
+
+def test_ring_allreduce_axis_size_one_is_identity():
+    x = jnp.asarray(np.random.default_rng(8).normal(size=10), jnp.float32)
+    out = jax.vmap(
+        lambda v: ring_allreduce_int8(v, "shard", 1), axis_name="shard"
+    )(x[None])
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(x))
+
+
+def test_ring_allreduce_preserves_shape_2d():
+    x = _shards(9, (5, 7))
+    out = jax.vmap(
+        lambda v: ring_allreduce_int8(v, "shard", N_SHARDS),
+        axis_name="shard",
+    )(jnp.asarray(x))
+    assert np.asarray(out).shape == (N_SHARDS, 5, 7)
+    tol = np.abs(x).max() / 127.0 * 1.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(out[0]), x.mean(axis=0), atol=tol)

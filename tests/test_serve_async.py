@@ -1,0 +1,453 @@
+"""Pipelined ingest (DESIGN.md Sec. 14): async rounds are bit-identical
+to the synchronous path, at the fleet layer and through the service.
+
+The async round API must be *invisible* in the outputs: ``feed_async``
+at any pipeline depth, with staging-buffer reuse, hot-row host gathers,
+mid-flight quarantine, and deferral backpressure, returns exactly what
+the synchronous ``feed`` path returns for the same chunks. These tests
+pin that, plus the exactness of the new backpressure accounting and the
+one-compile-per-tier discipline in pipelined mode.
+"""
+import numpy as np
+import pytest
+
+from test_serve_service import FakeClock, _service_recordings, _spaced_stream
+
+from repro.core.events import pack_bounds, pack_bounds_into
+from repro.core.pipeline import (
+    FleetPipeline,
+    PendingRound,
+    PipelineConfig,
+    StreamingPipeline,
+)
+from repro.core.pipeline.config import BatcherConfig
+from repro.data.evas import iter_chunks
+from repro.serve import AdmissionConfig, DetectionService
+from repro.serve.chaos import compare_outputs, concat_outputs
+from repro.serve.faults import FaultConfig
+
+
+def _fleet_rounds(seed: int, n_sensors: int, n_rounds: int, chunk: int = 250):
+    """Per-round chunk lists for a fleet: ``rounds[r][s]`` is sensor s's
+    (x, y, t, p) chunk for round r."""
+    streams = [
+        _spaced_stream(seed=seed + s, n=n_rounds * chunk)
+        for s in range(n_sensors)
+    ]
+    return [
+        [tuple(a[r * chunk:(r + 1) * chunk] for a in s) for s in streams]
+        for r in range(n_rounds)
+    ]
+
+
+def _sensor_parts(results, n_sensors: int):
+    """Split fleet results into per-sensor ScanResult part lists."""
+    return {
+        s: [res.sensor(s) for res in results] for s in range(n_sensors)
+    }
+
+
+def _assert_fleet_runs_equal(results_a, results_b, n_sensors: int, label: str):
+    pa = _sensor_parts(results_a, n_sensors)
+    pb = _sensor_parts(results_b, n_sensors)
+    for s in range(n_sensors):
+        bad = compare_outputs(
+            concat_outputs(pa[s]), concat_outputs(pb[s]), f"{label}/sensor{s}"
+        )
+        assert not bad, bad
+
+
+# ---------------------------------------------------------------------------
+# Fleet layer: feed_async vs feed.
+# ---------------------------------------------------------------------------
+
+def test_feed_async_bitwise_equals_feed():
+    """Six rounds dispatched without ever synchronizing (all PendingRound
+    handles held past the staging depth, so every staging set is reused
+    while its earlier rounds are still unconsumed), materialized newest
+    first, equal the synchronous path bitwise."""
+    config = PipelineConfig()
+    n_sensors, rounds = 3, _fleet_rounds(seed=70, n_sensors=3, n_rounds=6)
+
+    fp_sync = FleetPipeline(config, n_sensors=n_sensors)
+    sync_results = [fp_sync.feed(r) for r in rounds] + [fp_sync.flush()]
+
+    fp_async = FleetPipeline(config, n_sensors=n_sensors, staging_depth=2)
+    pending = [fp_async.feed_async(r) for r in rounds]
+    pending.append(fp_async.feed_async([None] * n_sensors, final=True))
+    # Materialize in reverse dispatch order: if staging reuse or the
+    # bookkeeping rows aliased live buffers, the oldest rounds would be
+    # the corrupted ones.
+    for pr in reversed(pending):
+        pr.wait()
+    async_results = [pr.result() for pr in pending]
+
+    _assert_fleet_runs_equal(sync_results, async_results, n_sensors, "async")
+
+
+def test_pending_round_api():
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    rounds = _fleet_rounds(seed=90, n_sensors=2, n_rounds=1)
+    pr = fp.feed_async(rounds[0])
+    assert isinstance(pr, PendingRound)
+    # Host-side bookkeeping never blocks: window counts are computed at
+    # dispatch from the cursor walk, not from device outputs.
+    assert pr.n_windows.shape == (2,)
+    assert pr.total_windows == int(pr.n_windows.sum()) > 0
+    res = pr.wait()
+    assert pr.ready()
+    assert pr.result() is res
+    assert res.sensor(0).num_windows == int(pr.n_windows[0])
+
+
+def test_feed_async_validation_raises_at_dispatch():
+    """A bad chunk raises at the feed_async call (not at materialization)
+    and leaves the fleet re-feedable — same contract as feed."""
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=2)
+    rounds = _fleet_rounds(seed=95, n_sensors=2, n_rounds=2)
+    x, y, t, p = rounds[0][0]
+    with pytest.raises(ValueError):
+        fp.feed_async([(x, y, t[::-1].copy(), p), rounds[0][1]])
+    # Untouched: the same chunks feed fine afterwards and match a clean run.
+    got = [fp.feed_async(r).wait() for r in rounds] + [fp.flush()]
+    ref_fp = FleetPipeline(config, n_sensors=2)
+    want = [ref_fp.feed(r) for r in rounds] + [ref_fp.flush()]
+    _assert_fleet_runs_equal(want, got, 2, "post-raise")
+
+
+def test_interleaved_sync_async_rounds():
+    """feed / feed_async interleave freely on one pipeline (the sync path
+    is just an awaited round)."""
+    config = PipelineConfig()
+    n_sensors, rounds = 2, _fleet_rounds(seed=80, n_sensors=2, n_rounds=4)
+    fp_ref = FleetPipeline(config, n_sensors=n_sensors)
+    want = [fp_ref.feed(r) for r in rounds] + [fp_ref.flush()]
+
+    fp = FleetPipeline(config, n_sensors=n_sensors)
+    got = [
+        fp.feed(rounds[0]),
+        fp.feed_async(rounds[1]).wait(),
+        fp.feed_async(rounds[2]).result(),  # never explicitly awaited
+        fp.feed(rounds[3]),
+        fp.flush(),
+    ]
+    _assert_fleet_runs_equal(want, got, n_sensors, "interleaved")
+
+
+def test_hot_row_gather_matches_dedicated_stream():
+    """A sparse pool (1 active slot of 8) takes the hot-row gather path in
+    _host_view and still returns the dedicated-pipeline outputs bitwise."""
+    config = PipelineConfig()
+    fp = FleetPipeline(config, n_sensors=8)
+    sp = StreamingPipeline(config)
+    x, y, t, p = _spaced_stream(seed=77, n=500)
+    chunks = [None] * 8
+    chunks[5] = (x, y, t, p)
+    res = fp.feed(chunks)
+    want = sp.feed(x, y, t, p)
+    got = res.sensor(5)
+    assert res._hot_rows == {5: 0}  # gather path taken, slot remapped
+    bad = compare_outputs(
+        concat_outputs([got]), concat_outputs([want]), "hot-gather"
+    )
+    assert not bad, bad
+    # Idle slots still answer (empty results), through the remap default.
+    assert res.sensor(0).num_windows == 0
+
+
+def test_pack_bounds_into_out_matches_positional():
+    x, y, t, p = _spaced_stream(seed=99, n=700)
+    bounds = [(0, 250, int(t[0])), (250, 500, int(t[250])), (500, 700, int(t[500]))]
+    cap = 256
+    we = pack_bounds(x, y, t, p, bounds, cap)
+    planes = tuple(np.zeros((4, cap), np.int32) for _ in range(4))
+    bv = np.zeros((4, cap), bool)
+    starts, stops, t_start, overflow = pack_bounds_into(
+        x, y, t, p, bounds, out=planes + (bv,)
+    )
+    for got, want in zip(planes, (we.batch.x, we.batch.y, we.batch.t, we.batch.p)):
+        np.testing.assert_array_equal(got[:3], np.asarray(want))
+    np.testing.assert_array_equal(bv[:3], np.asarray(we.batch.valid))
+    np.testing.assert_array_equal(starts, we.starts)
+    np.testing.assert_array_equal(stops, we.stops)
+    np.testing.assert_array_equal(t_start, we.t_start_us)
+    np.testing.assert_array_equal(overflow, we.overflow)
+    with pytest.raises(TypeError):
+        pack_bounds_into(x, y, t, p, bounds)  # planes required
+    with pytest.raises(TypeError):
+        pack_bounds_into(
+            x, y, t, p, bounds, *(planes + (bv,)), out=planes + (bv,)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Service layer: depth-N vs depth-1 bit-identity under churn.
+# ---------------------------------------------------------------------------
+
+def _drive_service(depth: int, seed: int):
+    """One seeded churn/chunking schedule through a service at the given
+    pipeline depth; returns {session key: concatenated output surfaces}.
+
+    Every schedule decision draws only from the seeded rng and counters
+    that evolve identically across depths (never from round outputs), so
+    two depths replay byte-identical feed sequences.
+    """
+    rng = np.random.default_rng(seed)
+    recs = _service_recordings()
+    config = PipelineConfig()
+    clock = FakeClock()
+    svc = DetectionService(
+        config, tiers=(2, 4),
+        admission=AdmissionConfig(max_delay_s=0.02, max_items=600),
+        clock=clock, max_inflight_rounds=depth,
+    )
+    live: dict[int, dict] = {}   # sid -> {rec index, cursor}
+    parts: dict[int, list] = {}
+    keys: dict[int, tuple] = {}  # sid -> replay-stable identity
+    spawned = 0
+
+    def collect(served):
+        for fd in served:
+            parts[fd.sid].append(fd.result)
+
+    for _ in range(40):
+        clock.now += 0.01
+        if live and rng.random() < 0.15:           # churn: detach one
+            sid = list(live)[int(rng.integers(len(live)))]
+            parts[sid].append(svc.detach(sid))
+            del live[sid]
+        if len(live) < 4 and rng.random() < 0.5:   # churn: attach one
+            sid = svc.attach()
+            live[sid] = {"rec": spawned % len(recs), "pos": 0}
+            keys[sid] = (spawned,)
+            parts[sid] = []
+            spawned += 1
+        for sid, st in live.items():               # randomized chunking
+            rec = recs[st["rec"]]
+            n = int(rng.integers(0, 400))
+            lo, hi = st["pos"], min(st["pos"] + n, len(rec.t))
+            if hi > lo:
+                collect(svc.feed(
+                    sid, rec.x[lo:hi], rec.y[lo:hi], rec.t[lo:hi], rec.p[lo:hi]
+                ))
+                st["pos"] = hi
+        if rng.random() < 0.3:
+            collect(svc.pump(force=True))
+        else:
+            collect(svc.pump())
+    for sid in list(live):
+        parts[sid].append(svc.detach(sid))
+    svc.drain()
+    assert svc.inflight_rounds == 0
+    return {keys[sid]: concat_outputs(p) for sid, p in parts.items()}
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_service_depth_bit_identity_randomized_churn(seed):
+    """The same randomized churn + chunking schedule, replayed at depth 1
+    (synchronous) and depth 3 (pipelined), is bitwise identical session
+    by session."""
+    ref = _drive_service(depth=1, seed=seed)
+    got = _drive_service(depth=3, seed=seed)
+    assert got.keys() == ref.keys()
+    for key in ref:
+        bad = compare_outputs(got[key], ref[key], f"session{key}")
+        assert not bad, bad
+
+
+def test_quarantine_with_rounds_in_flight():
+    """A validation fault that quarantines its session while dispatched
+    rounds are still executing neither corrupts the pending rounds nor
+    perturbs the healthy session, whose outputs stay bit-identical to a
+    fault-free reference."""
+    config = PipelineConfig()
+    rec = _service_recordings()[0]
+    bad_stream = _spaced_stream(seed=60, n=2000)
+
+    def run(with_fault: bool):
+        clock = FakeClock()
+        svc = DetectionService(
+            config, tiers=(2,),
+            admission=AdmissionConfig(max_delay_s=1e9, max_items=250),
+            faults=FaultConfig(on_validation_error="quarantine"),
+            clock=clock, max_inflight_rounds=3,
+        )
+        healthy = svc.attach("healthy")
+        bad = svc.attach("bad")
+        parts = {healthy: [], bad: []}
+
+        def collect(served):
+            for fd in served:
+                parts[fd.sid].append(fd.result)
+
+        pos = 0
+        for r in range(8):
+            clock.now += 0.01
+            lo, hi = pos, min(pos + 300, len(rec.t))
+            collect(svc.feed(
+                healthy, rec.x[lo:hi], rec.y[lo:hi], rec.t[lo:hi], rec.p[lo:hi]
+            ))
+            pos = hi
+            bx, by, bt, bp = (a[r * 200:(r + 1) * 200] for a in bad_stream)
+            if with_fault and r == 4:
+                assert svc.inflight_rounds >= 1  # fault lands mid-flight
+                collect(svc.feed(bad, bx, by, bt[::-1].copy(), bp))
+                assert svc.session(bad).state == "quarantined"
+            elif svc.session(bad).state == "live":
+                collect(svc.feed(bad, bx, by, bt, bp))
+        parts[healthy].append(svc.detach(healthy))
+        svc.drain()
+        return concat_outputs(parts[healthy])
+
+    bad = compare_outputs(run(True), run(False), "healthy")
+    assert not bad, bad
+
+
+def test_deferred_round_accounting_exact(monkeypatch):
+    """With the pipeline artificially held full (PendingRound.ready
+    forced False), admission-triggered rounds defer: counters increment
+    exactly, queues stay intact, offered == events + shed stays exact,
+    and force/drain still make progress by applying backpressure."""
+    config = PipelineConfig()
+    clock = FakeClock()
+    svc = DetectionService(
+        config, tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=100),
+        clock=clock, max_inflight_rounds=2,
+    )
+    sid = svc.attach()
+    x, y, t, p = _spaced_stream(seed=55, n=1000)
+
+    def feed_slice(i):
+        lo = i * 100
+        return svc.feed(sid, x[lo:lo + 100], y[lo:lo + 100],
+                        t[lo:lo + 100], p[lo:lo + 100])
+
+    feed_slice(0)  # round 1 dispatched
+    feed_slice(1)  # round 2 dispatched: pipeline now full
+    assert svc.inflight_rounds == 2 and svc.deferred_rounds == 0
+
+    monkeypatch.setattr(PendingRound, "ready", lambda self: False)
+    feed_slice(2)  # admission fires, pipeline "full" -> deferred
+    feed_slice(3)  # deferred again
+    sess = svc.session(sid)
+    assert svc.deferred_rounds == 2
+    assert sess.stats.deferred_rounds == 2
+    assert sess.queued_events == 200          # queue untouched by deferral
+    assert svc.inflight_rounds == 2           # nothing dispatched
+    st = sess.stats
+    assert st.offered_events == st.events + st.shed_events == 400
+
+    monkeypatch.undo()
+    done = svc.pump()  # oldest round is actually ready -> dispatches now
+    assert svc.deferred_rounds == 2           # no new deferrals
+    assert sess.queued_events == 0
+    svc.drain()
+    assert svc.inflight_rounds == 0
+    st = sess.stats
+    assert st.offered_events == st.events + st.shed_events == 400
+    assert st.steps == 3 and st.shed_events == 0
+
+
+def test_force_pump_applies_backpressure_not_deferral(monkeypatch):
+    """pump(force=True) never defers: it retires the oldest round (real
+    backpressure) and dispatches."""
+    config = PipelineConfig()
+    clock = FakeClock()
+    svc = DetectionService(
+        config, tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=100),
+        clock=clock, max_inflight_rounds=2,
+    )
+    sid = svc.attach()
+    x, y, t, p = _spaced_stream(seed=56, n=600)
+    for i in range(2):
+        svc.feed(sid, x[i * 100:(i + 1) * 100], y[i * 100:(i + 1) * 100],
+                 t[i * 100:(i + 1) * 100], p[i * 100:(i + 1) * 100])
+    assert svc.inflight_rounds == 2
+    monkeypatch.setattr(PendingRound, "ready", lambda self: False)
+    # Queue more data, then force: dispatch must happen despite ready()
+    # lying, because force retires (blocks on) the oldest round.
+    svc.feed(sid, x[200:300], y[200:300], t[200:300], p[200:300])
+    svc.pump(force=True)
+    assert svc.session(sid).queued_events == 0
+    assert svc.deferred_rounds == 1  # only the non-forced feed deferred
+    monkeypatch.undo()
+    svc.drain()
+
+
+def test_pipelined_churn_compiles_one_fleet_step_per_tier():
+    """The compile-discipline contract survives pipelining: a churn
+    workload at depth 3 traces exactly one fleet step per capacity tier
+    (staging buffers and pending rounds never enter compiled shapes)."""
+    from repro.core.pipeline import fleet as fleet_mod
+
+    # A config no other test jits (capacity 192), so every compile in
+    # this workload shows up in STEP_TRACES.
+    config = PipelineConfig(
+        batcher=BatcherConfig(size_threshold=100, capacity=192)
+    )
+    svc = DetectionService(
+        config, tiers=(2, 4),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        clock=FakeClock(), max_inflight_rounds=3,
+    )
+    streams = {}
+
+    def feed_round(sids):
+        for sid in sids:
+            x, y, t, p = streams[sid]["data"]
+            pos = streams[sid]["pos"]
+            svc.feed(sid, x[pos:pos + 100], y[pos:pos + 100],
+                     t[pos:pos + 100], p[pos:pos + 100])
+            streams[sid]["pos"] = pos + 100
+        svc.pump(force=True)
+
+    def attach():
+        sid = svc.attach()
+        streams[sid] = {"data": _spaced_stream(seed=30 + sid, n=2000), "pos": 0}
+        return sid
+
+    fleet_mod.STEP_TRACES.clear()
+    live = []
+    for target in (1, 2, 3, 4):
+        while len(live) < target:
+            live.append(attach())
+        feed_round(live)
+    while live:
+        svc.detach(live.pop())
+    live = [attach(), attach()]
+    feed_round(live)
+    svc.drain()
+
+    traces = [tr for tr in fleet_mod.STEP_TRACES if tr[2] == 192]
+    per_tier = {}
+    for s, *_ in traces:
+        per_tier[s] = per_tier.get(s, 0) + 1
+    assert per_tier == {2: 1, 4: 1}, traces
+
+
+def test_served_feed_is_lazy():
+    """ServedFeed defers materialization: num_windows answers from host
+    bookkeeping, result synchronizes once and caches."""
+    config = PipelineConfig()
+    clock = FakeClock()
+    svc = DetectionService(
+        config, tiers=(2,),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=250),
+        clock=clock, max_inflight_rounds=2,
+    )
+    sid = svc.attach()
+    x, y, t, p = _spaced_stream(seed=57, n=250)
+    done = svc.feed(sid, x, y, t, p)
+    assert len(done) == 1
+    fd = done[0]
+    assert fd._result is None          # nothing materialized yet
+    assert fd.num_windows == 1         # host-side count, still lazy
+    assert fd._result is None
+    res = fd.result
+    assert fd.result is res            # cached
+    assert res.num_windows == 1
+    svc.drain()

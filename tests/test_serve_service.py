@@ -383,7 +383,9 @@ from repro.serve import FaultConfig  # noqa: E402
 
 
 class _FlakyFleet:
-    """Fleet wrapper whose ``feed`` raises the next ``fail`` times."""
+    """Fleet wrapper whose dispatch raises the next ``fail`` times (the
+    service's retry loop wraps ``feed_async``; ``feed`` is intercepted
+    too so direct-fleet callers fail the same way)."""
 
     def __init__(self, fleet, fail: int):
         self._fleet = fleet
@@ -392,11 +394,18 @@ class _FlakyFleet:
     def __getattr__(self, name):
         return getattr(self._fleet, name)
 
-    def feed(self, *args, **kwargs):
+    def _maybe_fail(self):
         if self.fail > 0:
             self.fail -= 1
             raise RuntimeError("boom")
+
+    def feed(self, *args, **kwargs):
+        self._maybe_fail()
         return self._fleet.feed(*args, **kwargs)
+
+    def feed_async(self, *args, **kwargs):
+        self._maybe_fail()
+        return self._fleet.feed_async(*args, **kwargs)
 
 
 def test_fault_config_validation():
