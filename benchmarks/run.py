@@ -52,6 +52,7 @@ BENCHES = {
     "serve": ("serve_latency.py", "BENCH_serve.json"),
     "ingest": ("serve_saturation.py", "BENCH_ingest.json"),
     "chaos": ("chaos_soak.py", "BENCH_chaos.json"),
+    "constellation": ("constellation_scaling.py", "BENCH_constellation.json"),
 }
 
 

@@ -55,8 +55,10 @@ Design invariants:
 from __future__ import annotations
 
 import contextlib
+import copy
 import dataclasses
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -236,6 +238,45 @@ def _zero_slots_fn():
         return atlas, tracks
 
     return jax.jit(zero, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _set_slot_fn():
+    """Jit'd single-slot carry overwrite (atlas slice + tracker slice)
+    for importing a migrated slot. The atlas is donated, mirroring
+    :func:`_zero_slots_fn`; the tracker carry is not (the previous feed
+    handed those buffers to callers as ``final_tracks``)."""
+
+    def set_(atlas, tracks, slot, atlas_row, tracks_row):
+        atlas = atlas.at[slot].set(atlas_row)
+        tracks = jax.tree.map(
+            lambda a, r: a.at[slot].set(r), tracks, tracks_row
+        )
+        return atlas, tracks
+
+    return jax.jit(set_, donate_argnums=(0,))
+
+
+@dataclasses.dataclass
+class SlotCarry:
+    """One slot's complete streaming carry, detached from its pool.
+
+    The portable unit of cross-shard session migration (DESIGN.md
+    Sec. 15): the host cursor plus host copies of the slot's atlas slice
+    and tracker slice. Because the per-sensor carry IS the entire stream
+    state, exporting a slot from one :class:`FleetPipeline` and importing
+    it into a free slot of another (same :class:`PipelineConfig`) resumes
+    the stream bit-identically — regardless of either pool's capacity,
+    mesh, or slot index.
+    """
+
+    cursor: SensorCursor
+    atlas: np.ndarray  # (H+1, Wd) int32 — the slot's atlas slice
+    tracks: Any  # TrackState pytree, leaves (T, ...) numpy
+
+    @property
+    def pending_count(self) -> int:
+        return self.cursor.pending_count
 
 
 @dataclasses.dataclass
@@ -609,6 +650,70 @@ class FleetPipeline:
             st.cursors[s] = SensorCursor(pending=_EMPTY_CHUNK)
         with self._mesh_ctx():
             atlas, tracks = _zero_slots_fn()(st.atlas, st.tracks, jnp.asarray(mask))
+        self.state = FleetState(cursors=st.cursors, atlas=atlas, tracks=tracks)
+
+    def export_slot(self, slot: int) -> SlotCarry:
+        """Copy one slot's complete carry out of the pool (host arrays).
+
+        The returned :class:`SlotCarry` is self-contained: the host
+        cursor (with its unwindowed remainder) plus host copies of the
+        slot's atlas and tracker slices. Forces the slices to host, so
+        it blocks until any round still computing this slot's carry has
+        completed (rounds never run concurrently with carry surgery on
+        the same buffers anyway — outputs are not donated). The slot
+        itself is left untouched; callers recycling it afterwards use
+        :meth:`reset_slots`, exactly like a detach.
+        """
+        if not 0 <= slot < self.n_sensors:
+            raise IndexError(
+                f"slot {slot} out of range for a {self.n_sensors}-slot pool"
+            )
+        st = self.state
+        return SlotCarry(
+            cursor=copy.copy(st.cursors[slot]),
+            # Slicing materializes a fresh device buffer, so the host
+            # copy can never alias a donated carry buffer.
+            atlas=np.asarray(st.atlas[slot]),
+            tracks=jax.tree.map(lambda a: np.asarray(a[slot]), st.tracks),
+        )
+
+    def import_slot(self, slot: int, carry: SlotCarry) -> None:
+        """Install an exported carry into ``slot`` (cross-shard adopt).
+
+        The target slot's previous carry is overwritten — callers hand
+        in a free (reset) slot. Shapes are validated against this pool's
+        config before any mutation, so a carry exported under a
+        different :class:`PipelineConfig` is refused atomically. The
+        new carry is written under the pool's mesh, so it lands sharded
+        over the ``sensor`` axis like every other slot.
+        """
+        if not 0 <= slot < self.n_sensors:
+            raise IndexError(
+                f"slot {slot} out of range for a {self.n_sensors}-slot pool"
+            )
+        want = atlas_shape(self.config)
+        if tuple(carry.atlas.shape) != want:
+            raise ValueError(
+                f"carry atlas shape {carry.atlas.shape} does not match this "
+                f"pool's config ({want}); same PipelineConfig required"
+            )
+        st = self.state
+        ref = jax.tree.map(lambda a: a.shape[1:], st.tracks)
+        got = jax.tree.map(lambda a: tuple(a.shape), carry.tracks)
+        if jax.tree.leaves(ref) != jax.tree.leaves(got):
+            raise ValueError(
+                f"carry tracker shapes {jax.tree.leaves(got)} do not match "
+                f"this pool's ({jax.tree.leaves(ref)})"
+            )
+        st.cursors[slot] = copy.copy(carry.cursor)
+        with self._mesh_ctx():
+            atlas, tracks = _set_slot_fn()(
+                st.atlas,
+                st.tracks,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(carry.atlas),
+                jax.tree.map(jnp.asarray, carry.tracks),
+            )
         self.state = FleetState(cursors=st.cursors, atlas=atlas, tracks=tracks)
 
     def grow(self, new_capacity: int) -> None:

@@ -12,8 +12,15 @@
   isolation (quarantine, heartbeat eviction, degraded rounds).
 * ``chaos``    — deterministic seeded fault-injection harness pinning
   the isolation and bit-identity guarantees.
+* ``constellation`` — :class:`ConstellationService`: sensor sessions
+  partitioned over N service shards on a device mesh, with the
+  placement/rebalance planner, whole-shard rescue, and the compressed
+  cross-shard exchange (DESIGN.md Sec. 15).
+* ``chaos_shards`` — the shard-level chaos harness (whole-shard stalls,
+  forced migrations/rebalances on top of the per-sensor taxonomy).
 * ``lm``       — the batched LM engine, a thin client of the shared
-  batcher (``repro.serve.engine`` remains as a shim).
+  batcher. Lazy here: importing ``repro.serve`` does not pull the LM
+  client; ``repro.serve.engine`` remains as a deprecated shim.
 """
 from repro.serve.batcher import (  # noqa: F401
     AdmissionConfig,
@@ -25,15 +32,21 @@ from repro.serve.chaos import (  # noqa: F401
     ChaosHarness,
     ChaosReport,
 )
+from repro.serve.chaos_shards import (  # noqa: F401
+    SHARD_FAULT_TAXONOMY,
+    ShardChaosConfig,
+    ShardChaosHarness,
+    ShardChaosReport,
+)
+from repro.serve.constellation import (  # noqa: F401
+    ConstellationFeed,
+    ConstellationService,
+    CrossShardExchange,
+    partition_devices,
+)
 from repro.serve.faults import (  # noqa: F401
     FaultConfig,
     SessionHealth,
-)
-from repro.serve.lm import (  # noqa: F401
-    DualThresholdBatcher,
-    EngineConfig,
-    Request,
-    ServingEngine,
 )
 from repro.serve.sessions import (  # noqa: F401
     SensorSession,
@@ -44,3 +57,19 @@ from repro.serve.service import (  # noqa: F401
     DetectionService,
     ServedFeed,
 )
+
+# LM engine names resolve lazily so the detection-serving surface does
+# not import the LM client (or anything it drags in) eagerly.
+_LM_NAMES = ("DualThresholdBatcher", "EngineConfig", "Request", "ServingEngine")
+
+
+def __getattr__(name: str):
+    if name in _LM_NAMES:
+        from repro.serve import lm
+
+        return getattr(lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LM_NAMES))

@@ -1,4 +1,4 @@
-"""Back-compat shim: the LM engine moved to :mod:`repro.serve.lm`.
+"""Deprecated back-compat shim: the LM engine moved to :mod:`repro.serve.lm`.
 
 The serving stack is now layered (DESIGN.md Sec. 11):
 
@@ -10,11 +10,21 @@ The serving stack is now layered (DESIGN.md Sec. 11):
 * :mod:`repro.serve.lm`       — the batched LM engine, a thin client of
   the shared batcher.
 
-Importing from ``repro.serve.engine`` keeps working.
+Importing from ``repro.serve.engine`` keeps working for now but warns;
+update imports to ``repro.serve.lm``.
 """
+import warnings
+
 from repro.serve.lm import (  # noqa: F401
     DualThresholdBatcher,
     EngineConfig,
     Request,
     ServingEngine,
+)
+
+warnings.warn(
+    "repro.serve.engine is deprecated; import the LM engine from "
+    "repro.serve.lm instead",
+    DeprecationWarning,
+    stacklevel=2,
 )

@@ -43,6 +43,7 @@ Contracts:
 from __future__ import annotations
 
 import bisect
+import copy
 import dataclasses
 import time
 from typing import Callable
@@ -54,6 +55,7 @@ from repro.core.pipeline.fleet import (
     DEFAULT_TIERS,
     FleetPipeline,
     PendingRound,
+    SlotCarry,
     tier_capacity,
 )
 from repro.core.pipeline.scan import ScanResult
@@ -63,9 +65,11 @@ from repro.serve.sessions import (
     DETACHED,
     EVICTED,
     LIVE,
+    MIGRATED,
     QUARANTINED,
     SensorSession,
     SessionError,
+    SessionStats,
 )
 
 
@@ -99,6 +103,32 @@ class ServedFeed:
         if self._result is None:
             self._result = self._round.result().sensor(self._slot)
         return self._result
+
+
+@dataclasses.dataclass
+class SessionExport:
+    """One session's complete portable state (cross-shard migration).
+
+    Produced by :meth:`DetectionService.export_session`, consumed by
+    :meth:`DetectionService.adopt_session` on any service sharing the
+    same :class:`~repro.core.pipeline.config.PipelineConfig`. Carries
+    the fleet slot carry (the entire device-side stream state), the
+    unstepped ingest queue with original arrival stamps, the monotone
+    watermark, and the session's accumulated stats/error records — so
+    the adopted stream resumes bit-identically and the operator-facing
+    accounting survives the hop.
+    """
+
+    name: str
+    carry: SlotCarry
+    queue: list  # [(chunk, arrival_s)] in arrival order
+    last_t: int | None
+    stats: SessionStats
+    errors: list[SessionError]
+
+    @property
+    def queued_events(self) -> int:
+        return sum(len(c[2]) for c, _ in self.queue)
 
 
 class DetectionService:
@@ -191,6 +221,9 @@ class DetectionService:
         self.step_retries = 0  # fleet step retries performed
         self.deferred_rounds = 0  # admission rounds deferred, pipeline full
         self.errors: list[SessionError] = []  # service-wide fault log
+        # Most recently dispatched fleet round (monitoring / cross-shard
+        # exchange taps; never consumed by the service itself).
+        self.last_round: PendingRound | None = None
 
     # ------------------------------------------------------------------
     # Introspection.
@@ -226,6 +259,11 @@ class DetectionService:
     def detached_sessions(self) -> list[int]:
         """Sids of retained detached-session records (see :meth:`forget`)."""
         return self._sids_in(DETACHED)
+
+    @property
+    def migrated_sessions(self) -> list[int]:
+        """Sids exported to another service (records retained)."""
+        return self._sids_in(MIGRATED)
 
     @property
     def quarantined_sessions(self) -> list[int]:
@@ -372,6 +410,67 @@ class DetectionService:
             )
         self._release_slot(sess, DETACHED)
         return out[0].result
+
+    def export_session(self, sid: int) -> SessionExport:
+        """Lift a live session out of this service for re-migration to
+        another shard (DESIGN.md Sec. 15).
+
+        The complete state crosses: the fleet slot carry (cursor +
+        atlas slice + tracker slice — the entire stream state, so the
+        destination resumes bit-identically), the unstepped ingest queue
+        with original arrival stamps, the monotone watermark, and the
+        accumulated stats/errors. Locally this is a detach-shaped exit
+        *without* the flushing step: the slot is zeroed and recycled,
+        the admitter entries dropped, and the record retained as
+        ``"migrated"``. Works with rounds in flight — the export blocks
+        only on the slot's own carry buffers; results already served
+        stay valid (outputs are never donated).
+        """
+        sess = self._live(sid)
+        carry = self._fleet.export_slot(sess.slot)
+        queue = sess.export_queue()
+        self._release_slot(sess, MIGRATED)
+        self._maybe_demote()
+        export = SessionExport(
+            name=sess.name,
+            carry=carry,
+            queue=queue,
+            last_t=sess.last_t,
+            stats=sess.stats,
+            errors=sess.errors,
+        )
+        # The live stats/error objects travel WITH the stream; the local
+        # migrated record keeps a frozen snapshot (no aliasing with the
+        # destination's continued accounting).
+        sess.stats = copy.deepcopy(sess.stats)
+        sess.errors = list(sess.errors)
+        return export
+
+    def adopt_session(self, export: SessionExport, name: str | None = None) -> int:
+        """Admit a migrated session: a fresh slot (tier promotion if
+        needed, like any attach), the exported carry installed into it,
+        and the exported queue/stats/watermark restored. Returns the new
+        (local) session id — the constellation layer keeps the global
+        identity. The adopted stream is bit-identical to one that never
+        migrated, for any interleaving of feeds around the hop."""
+        sid = self.attach(name or export.name)
+        sess = self._sessions[sid]
+        try:
+            self._fleet.import_slot(sess.slot, export.carry)
+        except (ValueError, IndexError):
+            # Shape-incompatible carry (different PipelineConfig): undo
+            # the attach so the refusal is atomic on this service.
+            self._release_slot(sess, DETACHED)
+            del self._sessions[sid]
+            raise
+        sess.last_t = export.last_t
+        sess.stats = export.stats
+        sess.errors = export.errors
+        for chunk, arrival in export.queue:
+            sess.requeue(chunk, arrival)
+        if sess.queued_events:
+            self._admit.restate(sid, sess.queued_events)
+        return sid
 
     def forget(self, sid: int) -> None:
         """Drop a *closed* (detached / quarantined / evicted) session's
@@ -541,6 +640,7 @@ class DetectionService:
                 )
             return None
         self._inflight.append(pending)
+        self.last_round = pending
         now = self.clock()
         served: list[ServedFeed] = []
         for slot in sorted(by_slot):

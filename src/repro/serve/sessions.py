@@ -42,6 +42,10 @@ LIVE = "live"
 DETACHED = "detached"
 QUARANTINED = "quarantined"
 EVICTED = "evicted"
+# Exported to another shard's service (constellation re-migration): the
+# local record survives read-only, like a detach, but the stream itself
+# continues bit-identically under a new sid on the destination shard.
+MIGRATED = "migrated"
 
 # Shed policies for a budget-bounded session queue (DESIGN.md Sec. 13).
 SHED_REJECT = "reject"          # refuse the whole over-budget chunk
@@ -282,6 +286,25 @@ class SensorSession:
             0, _Queued(chunk, n, self.clock() if arrival_s is None else arrival_s)
         )
         self._queued_events += n
+
+    def export_queue(self) -> list[tuple[Chunk, float]]:
+        """Drain the queue as ``(chunk, arrival_s)`` pairs in arrival
+        order — the migration counterpart of :meth:`take`. Unlike
+        ``take`` the chunks stay separate with their own stamps, so the
+        adopting session (:meth:`requeue`) reconstructs the queue
+        exactly: latency clocks and shed bookkeeping carry over."""
+        out = [(q.chunk, q.arrival_s) for q in self._queue]
+        self._queue.clear()
+        self._queued_events = 0
+        return out
+
+    def requeue(self, chunk: Chunk, arrival_s: float) -> None:
+        """Append one exported chunk with its original arrival stamp
+        (adopt path). No stats are touched: the exported
+        :class:`SessionStats` already counted these events at their
+        original ``accept``."""
+        self._queue.append(_Queued(chunk, len(chunk[2]), arrival_s))
+        self._queued_events += len(chunk[2])
 
     def drop_queue(self) -> int:
         """Discard every queued chunk (quarantine path); returns the

@@ -1,0 +1,438 @@
+"""ConstellationService tests (DESIGN.md Sec. 15).
+
+Placement/rebalance planner behavior, bit-identity of healthy sessions
+under randomized multi-shard churn (migrations, rebalances, whole-shard
+rescue), the compressed cross-shard exchange's quantization bounds, and
+the shard chaos harness — plus the multi-device shard-mesh path in a
+subprocess.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.events import BatcherConfig
+from repro.core.pipeline import PipelineConfig
+from repro.core.pipeline.fleet import FleetPipeline
+from repro.core.pipeline.stream import StreamingPipeline
+from repro.serve.batcher import AdmissionConfig
+from repro.serve.chaos import (
+    _FakeClock,
+    _FlakyFleet,
+    _Stream,
+    compare_outputs,
+    concat_outputs,
+)
+from repro.serve.chaos_shards import (
+    SHARD_FAULT_TAXONOMY,
+    ShardChaosConfig,
+    ShardChaosHarness,
+)
+from repro.serve.constellation import (
+    ConstellationService,
+    CrossShardExchange,
+    partition_devices,
+)
+from repro.serve.faults import FaultConfig
+
+CONFIG = PipelineConfig(
+    batcher=BatcherConfig(time_threshold_us=2_000, size_threshold=40, capacity=64)
+)
+# Manual pump only: admission never fires on its own, so rounds land
+# exactly where the test dispatches them.
+MANUAL = AdmissionConfig(max_delay_s=1e9, max_items=1 << 30)
+
+
+def _make(n_shards=2, **kw):
+    kw.setdefault("tiers", (2, 4, 8))
+    kw.setdefault("admission", MANUAL)
+    kw.setdefault("clock", _FakeClock())
+    kw.setdefault("sleep", lambda s: None)
+    return ConstellationService(CONFIG, n_shards=n_shards, **kw)
+
+
+def _drain_all(cs, gids):
+    # Forced pumps clear the service queues; the batcher remainder
+    # inside each slot carry (also counted by backlog()) only leaves at
+    # detach, so loop on queued events, not backlog.
+    out = []
+    while any(cs.session(g).queued_events for g in gids):
+        out += cs.pump(force=True)
+    cs.drain()
+    return out
+
+
+def _reference(chunks):
+    ref = StreamingPipeline(CONFIG)
+    return [ref.feed(*c) for c in chunks] + [ref.flush()]
+
+
+# ---------------------------------------------------------------------------
+# Device partitioning and placement.
+# ---------------------------------------------------------------------------
+
+
+def test_partition_devices():
+    # Balanced contiguous split when devices cover the shards.
+    assert partition_devices(range(10), 3) == [
+        (0, 1, 2, 3),
+        (4, 5, 6),
+        (7, 8, 9),
+    ]
+    assert partition_devices(range(4), 4) == [(0,), (1,), (2,), (3,)]
+    # Round-robin sharing when shards outnumber devices.
+    assert partition_devices(range(2), 5) == [(0,), (1,), (0,), (1,), (0,)]
+    with pytest.raises(ValueError, match="n_shards"):
+        partition_devices(range(2), 0)
+    with pytest.raises(ValueError, match="at least one device"):
+        partition_devices([], 2)
+
+
+def test_attach_routes_least_loaded():
+    cs = _make()
+    gids = [cs.attach() for _ in range(4)]
+    # Alternating placement (ties broken by shard index).
+    assert [cs.shard_of(g) for g in gids] == [0, 1, 0, 1]
+    assert cs.loads == [2, 2]
+    cs.detach(gids[0])
+    assert cs.loads == [1, 2]
+    # The freed capacity attracts the next attach.
+    assert cs.shard_of(cs.attach()) == 0
+    assert cs.n_sessions == 4
+    assert cs.capacity == sum(sh.service.capacity for sh in cs._shards)
+
+
+def test_routing_errors():
+    cs = _make()
+    gid = cs.attach()
+    with pytest.raises(KeyError, match="unknown session"):
+        cs.feed(999, *_Stream(0).next(8))
+    cs.detach(gid)
+    with pytest.raises(RuntimeError, match=f"session {gid} is"):
+        cs.feed(gid, *_Stream(0).next(8))
+    with pytest.raises(RuntimeError, match="live; detach first"):
+        cs.forget(cs.attach())
+    cs.forget(gid)
+    with pytest.raises(KeyError):
+        cs.shard_of(gid)
+    cs.forget(gid)  # idempotent on unknown/forgotten ids
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity under churn.
+# ---------------------------------------------------------------------------
+
+
+def test_bit_identity_under_randomized_churn():
+    """5 sensors over 2 shards, 10 rounds with random migrations and
+    rebalance sweeps interleaved: every session's concatenated output is
+    bit-identical to a dedicated StreamingPipeline fed the same chunks."""
+    rng = np.random.default_rng(3)
+    cs = _make()
+    gids = [cs.attach() for _ in range(5)]
+    streams = {g: _Stream(100 + g) for g in gids}
+    fed = {g: [] for g in gids}
+    parts = {g: [] for g in gids}
+
+    def collect(served):
+        for f in served:
+            parts[f.gid].append(f.result)
+
+    for rnd in range(10):
+        for g in gids:
+            # Ragged but few distinct sizes: chunking still varies per
+            # sensor/round without a fresh XLA compile per feed shape.
+            chunk = streams[g].next(int(rng.choice([60, 100, 140])))
+            fed[g].append(chunk)
+            collect(cs.feed(g, *chunk))
+        collect(cs.pump(force=True))
+        if rng.random() < 0.5:
+            g = int(rng.choice(gids))
+            cs.migrate(g, 1 - cs.shard_of(g))  # always a real move
+        if rng.random() < 0.3:
+            cs.rebalance()
+    collect(_drain_all(cs, gids))
+    assert cs.migrations >= 2  # the schedule actually churned
+    for g in gids:
+        parts[g].append(cs.detach(g))
+        want = _reference(fed[g])
+        assert (
+            compare_outputs(
+                concat_outputs(parts[g]), concat_outputs(want), f"gid {g}"
+            )
+            == []
+        )
+    # Exchange saw the rounds and compressed them.
+    st = cs.exchange.stats
+    assert st["rounds"] > 0 and st["compression_ratio"] > 3.0
+
+
+def test_explicit_migrate_keeps_gid_and_stats():
+    cs = _make()
+    g0, g1 = cs.attach(), cs.attach()
+    s = _Stream(7)
+    cs.feed(g0, *s.next(100))
+    cs.pump(force=True)
+    events_before = cs.session(g0).stats.events
+    assert events_before > 0
+    src = cs.shard_of(g0)
+    cs.migrate(g0, 1 - src)
+    assert cs.shard_of(g0) == 1 - src
+    assert cs.migrations == 1
+    assert cs.session(g0).stats.events == events_before  # record travels
+    cs.migrate(g0, 1 - src)  # same-shard move is a no-op
+    assert cs.migrations == 1
+    assert cs.loads == [1, 1] or cs.loads == [0, 2]
+    stats = cs.stats()
+    assert stats["migrations"] == 1 and len(stats["shards"]) == 2
+    cs.detach(g0), cs.detach(g1)
+
+
+def test_rebalance_moves_youngest_to_least_loaded():
+    cs = _make(auto_rebalance=False, rebalance_margin=1)
+    gids = [cs.attach() for _ in range(6)]
+    # Pile everyone onto shard 0.
+    for g in gids:
+        if cs.shard_of(g) != 0:
+            cs.migrate(g, 0)
+    assert cs.loads == [6, 0]
+    moves = cs.rebalance()
+    assert moves == 3 and cs.loads == [3, 3]
+    assert cs.rebalances == 1
+    assert cs.rebalance() == 0  # already within margin
+
+
+# ---------------------------------------------------------------------------
+# Whole-shard rescue.
+# ---------------------------------------------------------------------------
+
+
+def test_shard_stall_rescue_bit_identity():
+    """A whole-shard stall (every fleet dispatch failing) triggers the
+    rescue after the configured degraded streak: the shard is marked
+    down, its sessions re-migrate and keep streaming bit-identically."""
+    cs = _make(
+        faults=FaultConfig(degrade_on_step_failure=True, max_step_retries=0),
+        rescue_after_degraded_rounds=2,
+    )
+    gids = [cs.attach() for _ in range(4)]
+    streams = {g: _Stream(200 + g) for g in gids}
+    fed = {g: [] for g in gids}
+    parts = {g: [] for g in gids}
+
+    def feed_round():
+        for g in gids:
+            chunk = streams[g].next(90)
+            fed[g].append(chunk)
+            for f in cs.feed(g, *chunk):
+                parts[f.gid].append(f.result)
+        for f in cs.pump(force=True):
+            parts[f.gid].append(f.result)
+
+    feed_round()  # healthy warm-up round
+    stalled = _FlakyFleet(cs.shard(0).service._fleet)
+    stalled.fail_next = 10**9
+    cs.shard(0).service._fleet = stalled
+    victims = [g for g in gids if cs.shard_of(g) == 0]
+    for _ in range(3):
+        feed_round()
+    assert cs.rescues == 1 and cs.down_shards == [0]
+    assert cs.loads[0] == 0 and cs.loads[1] == 4
+    assert all(cs.shard_of(g) == 1 for g in victims)
+    assert cs.n_sessions == 4  # moved, not lost
+    for _ in range(2):
+        feed_round()
+    for f in _drain_all(cs, gids):
+        parts[f.gid].append(f.result)
+    for g in gids:
+        parts[g].append(cs.detach(g))
+        want = _reference(fed[g])
+        assert (
+            compare_outputs(
+                concat_outputs(parts[g]), concat_outputs(want), f"gid {g}"
+            )
+            == []
+        )
+    # Revival re-admits the shard for new placements.
+    stalled.fail_next = 0
+    cs.revive_shard(0)
+    assert cs.shard_of(cs.attach()) == 0
+
+
+def test_rescue_refuses_when_no_survivor():
+    cs = _make()
+    assert cs.rescue_shard(1) == 0  # nothing to move; shard 1 downed
+    with pytest.raises(RuntimeError, match="no other shard is up"):
+        cs.rescue_shard(0)  # would strand any stream with nowhere to go
+    cs.shard(0).down = True
+    with pytest.raises(RuntimeError, match="every shard is down"):
+        cs.attach()
+    cs.revive_shard(0)
+    assert cs.shard_of(cs.attach()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Compressed cross-shard exchange.
+# ---------------------------------------------------------------------------
+
+
+def _rounds(n_sensors, n_rounds, seed=11):
+    """Real PendingRounds from a fleet fed dense enough to close windows."""
+    fleet = FleetPipeline(CONFIG, n_sensors=n_sensors, uniform_fast_path=False)
+    streams = [_Stream(seed + i, dt_us=60) for i in range(n_sensors)]
+    out = []
+    for _ in range(n_rounds):
+        rnd = fleet.feed_async([s.next(120) for s in streams])
+        rnd.wait()
+        out.append(rnd)
+    return out
+
+
+def test_exchange_int8_ef_bounds_and_telescoping():
+    rounds = _rounds(2, 6)
+    ex = CrossShardExchange(1, "int8_ef")
+    oracle = CrossShardExchange(1, "exact")
+    sum_exact = sum_pub = None
+    for rnd in rounds:
+        exact = np.asarray(CrossShardExchange.summary_plane(rnd))
+        ef_prev = ex.error_feedback(0)
+        ef_prev = np.zeros_like(exact) if ef_prev is None else ef_prev
+        ex.push_round(0, rnd)
+        oracle.push_round(0, rnd)
+        # Exact mode is the uncompressed oracle, bit-identical.
+        assert np.array_equal(oracle.latest(0), exact)
+        deq = ex.latest(0)
+        scale = ex.last_scale(0)
+        # Per-round bound: symmetric int8 round-to-nearest of the
+        # EF-corrected plane never errs by more than half a step.
+        assert np.all(np.abs(deq - (exact + ef_prev)) <= scale / 2 + 1e-5)
+        sum_exact = exact if sum_exact is None else sum_exact + exact
+        sum_pub = deq if sum_pub is None else sum_pub + deq
+    # Telescoping: published sums == exact sums - final residual, so a
+    # running cross-shard accumulation is exact up to one round's error.
+    np.testing.assert_allclose(
+        sum_pub, sum_exact - ex.error_feedback(0), rtol=1e-5, atol=1e-3
+    )
+    assert ex.columns == oracle.columns
+    assert ex.columns[:2] == ("windows", "clusters")
+    assert ex.stats["compression_ratio"] > 3.0
+    assert ex.wire_bytes < oracle.wire_bytes
+
+
+def test_exchange_ef_survives_tier_resize():
+    """Growing the slot pool mid-stream resizes the plane; surviving
+    rows keep their EF residual (the bound holds with the padded EF)."""
+    ex = CrossShardExchange(1, "int8_ef")
+    small = _rounds(2, 2, seed=21)
+    big = _rounds(4, 1, seed=22)
+    for rnd in small:
+        ex.push_round(0, rnd)
+    ef_prev = ex.error_feedback(0)
+    assert ef_prev.shape[0] == 2
+    exact = np.asarray(CrossShardExchange.summary_plane(big[0]))
+    padded = np.zeros_like(exact)
+    padded[:2] = ef_prev
+    ex.push_round(0, big[0])
+    assert np.all(
+        np.abs(ex.latest(0) - (exact + padded)) <= ex.last_scale(0) / 2 + 1e-5
+    )
+
+
+def test_exchange_off_and_validation():
+    ex = CrossShardExchange(2, "off")
+    for rnd in _rounds(1, 1):
+        ex.push_round(0, rnd)
+    assert ex.latest(0) is None and ex.rounds == 0 and ex.view() == {}
+    with pytest.raises(ValueError, match="exchange mode"):
+        CrossShardExchange(2, "zstd")
+    with pytest.raises(ValueError, match="exchange mode"):
+        _make(exchange="gzip")
+
+
+# ---------------------------------------------------------------------------
+# Shard chaos harness.
+# ---------------------------------------------------------------------------
+
+
+def test_shard_chaos_smoke():
+    cfg = ShardChaosConfig(
+        n_sensors=4,
+        n_faulty=1,
+        n_rounds=24,
+        seed=3,
+        faults=("stall", "burst", "migrate", "rebalance", "shard_stall"),
+    )
+    rep = ShardChaosHarness(cfg).run()
+    assert rep.bit_identical, rep.mismatches
+    assert rep.lost_sessions == 0
+    assert rep.escaped_errors == []
+    assert rep.rescues >= 1
+    assert all(rep.fired.get(k, 0) >= 1 for k in cfg.faults), rep.fired
+    assert rep.exchange["compression_ratio"] > 3.0
+
+
+def test_shard_chaos_config_validation():
+    with pytest.raises(ValueError, match=">= 2 shards"):
+        ShardChaosConfig(n_shards=1)
+    with pytest.raises(ValueError, match="unknown faults"):
+        ShardChaosConfig(faults=("meteor",))
+    with pytest.raises(ValueError, match="shard_stall_rounds"):
+        ShardChaosConfig(shard_stall_rounds=2, rescue_after_degraded_rounds=2)
+    assert set(SHARD_FAULT_TAXONOMY) > {"migrate", "rebalance", "shard_stall"}
+
+
+# ---------------------------------------------------------------------------
+# Multi-device shard meshes.
+# ---------------------------------------------------------------------------
+
+
+def test_constellation_multidevice(subproc):
+    """4 devices, 2 shards: each shard gets a 2-device sensor mesh, and
+    a session migrated across the meshes stays bit-identical."""
+    out = subproc(
+        """
+import sys
+sys.path.insert(0, "tests")
+import jax
+import numpy as np
+assert jax.device_count() == 4
+from test_constellation import CONFIG, MANUAL, _drain_all, _reference
+from repro.serve.chaos import _FakeClock, _Stream, compare_outputs, concat_outputs
+from repro.serve.constellation import ConstellationService
+
+cs = ConstellationService(
+    CONFIG, n_shards=2, tiers=(2, 4), admission=MANUAL,
+    clock=_FakeClock(), sleep=lambda s: None,
+)
+assert [len(cs.shard(i).devices) for i in range(2)] == [2, 2]
+assert all(cs.shard(i).mesh is not None for i in range(2))
+assert cs.shard(0).devices != cs.shard(1).devices
+
+gids = [cs.attach() for i in range(2)]
+streams = {g: _Stream(400 + g) for g in gids}
+fed = {g: [] for g in gids}
+parts = {g: [] for g in gids}
+for rnd in range(4):
+    for g in gids:
+        chunk = streams[g].next(90)
+        fed[g].append(chunk)
+        for f in cs.feed(g, *chunk):
+            parts[f.gid].append(f.result)
+    for f in cs.pump(force=True):
+        parts[f.gid].append(f.result)
+    if rnd == 1:
+        cs.migrate(gids[0], 1 - cs.shard_of(gids[0]))
+for f in _drain_all(cs, gids):
+    parts[f.gid].append(f.result)
+for g in gids:
+    parts[g].append(cs.detach(g))
+    bad = compare_outputs(
+        concat_outputs(parts[g]), concat_outputs(_reference(fed[g])), str(g)
+    )
+    assert bad == [], bad
+assert cs.migrations == 1
+assert cs.exchange.stats["compression_ratio"] > 3.0
+print("multidevice constellation bit-identical")
+""",
+        device_count=4,
+    )
+    assert "multidevice constellation bit-identical" in out

@@ -1,0 +1,63 @@
+"""Import-surface contracts for the serving package.
+
+``repro.serve`` exposes the detection stack eagerly and the LM engine
+lazily (PEP 562), and the legacy ``repro.serve.engine`` shim warns.
+Both run in a subprocess so this test controls exactly which modules
+are already imported.
+"""
+import subprocess
+import sys
+
+
+def _run(code: str) -> str:
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )
+    assert proc.returncode == 0, proc.stderr
+    return proc.stdout
+
+
+def test_serve_import_is_lm_lazy():
+    out = _run(
+        """
+import sys
+import repro.serve as s
+assert "repro.serve.lm" not in sys.modules, "LM client imported eagerly"
+# The detection-serving surface is eager...
+s.DetectionService, s.ConstellationService, s.ShardChaosHarness
+# ...and the LM names still resolve (lazily) with a stable dir().
+assert "ServingEngine" in dir(s)
+s.DualThresholdBatcher, s.EngineConfig, s.Request, s.ServingEngine
+assert "repro.serve.lm" in sys.modules
+try:
+    s.NoSuchName
+except AttributeError as e:
+    assert "NoSuchName" in str(e)
+else:
+    raise AssertionError("missing attribute did not raise")
+print("lazy ok")
+"""
+    )
+    assert "lazy ok" in out
+
+
+def test_engine_shim_warns_deprecated():
+    out = _run(
+        """
+import warnings
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    import repro.serve.engine as engine
+msgs = [str(w.message) for w in caught
+        if issubclass(w.category, DeprecationWarning)]
+assert any("repro.serve.lm" in m for m in msgs), msgs
+# The shim still re-exports the moved names.
+engine.DualThresholdBatcher, engine.ServingEngine
+print("shim warns")
+"""
+    )
+    assert "shim warns" in out

@@ -242,7 +242,7 @@ print("RING OK")
 # ---------------------------------------------------------------------------
 
 def test_dual_threshold_batcher_semantics():
-    from repro.serve.engine import DualThresholdBatcher, EngineConfig, Request
+    from repro.serve.lm import DualThresholdBatcher, EngineConfig, Request
 
     t = [0.0]
     b = DualThresholdBatcher(
