@@ -9,7 +9,9 @@ Two kinds of entries share this single entrypoint:
   subprocesses writing ``BENCH_<name>.json`` at the repo root. Every
   payload carries a uniform ``bench`` block — ``{name, p50_ms, p99_ms,
   gates:[{name, value, threshold, op, pass}]}`` — which this aggregator
-  collects into one summary table. Each bench's own exit code is the
+  collects into one summary table. Benches that account wire traffic
+  also report ``bytes_per_round``; the summary prints it as a column
+  and shows ``WARN`` (never an error) for payloads missing the field. Each bench's own exit code is the
   gate authority (env knobs like ``BENCH_NO_FAIL`` /
   ``BENCH_GATE_SPEEDUP`` / ``BENCH_GATE_EVENT`` pass through and mean
   the same thing here as when a bench is run directly); the aggregator
@@ -104,21 +106,28 @@ def main() -> None:
 
     if not summaries:
         return
-    print(f"\n{'bench':<18} {'p50 ms':>9} {'p99 ms':>9}  gates")
+    print(f"\n{'bench':<18} {'p50 ms':>9} {'p99 ms':>9} {'bytes/round':>12}  gates")
     failed = False
     for key, block, ok in summaries:
         failed |= not ok
         if block is None:
-            print(f"{key:<18} {'-':>9} {'-':>9}  ERROR (no BENCH json)")
+            print(f"{key:<18} {'-':>9} {'-':>9} {'-':>12}  ERROR (no BENCH json)")
             continue
+        bpr = block.get("bytes_per_round")
+        if bpr is None:
+            # Older BENCH json predating the wire-format accounting: the
+            # column is advisory, so a missing field warns but never fails.
+            bpr_col = "WARN"
+        else:
+            bpr_col = f"{bpr:.0f}"
         gates = "; ".join(
             f"{g['name']} {g['value']} {g['op']} {g['threshold']} "
             f"[{'PASS' if g['pass'] else 'FAIL'}]"
             for g in block.get("gates", [])
         )
         print(
-            f"{block['name']:<18} {block['p50_ms']:>9} {block['p99_ms']:>9}  "
-            f"{gates}{'' if ok else '  << exit 1'}"
+            f"{block['name']:<18} {block['p50_ms']:>9} {block['p99_ms']:>9} "
+            f"{bpr_col:>12}  {gates}{'' if ok else '  << exit 1'}"
         )
     if failed:
         sys.exit(1)

@@ -38,7 +38,11 @@ class EventBatch(NamedTuple):
 
     x: jax.Array  # (E,) int32 pixel column
     y: jax.Array  # (E,) int32 pixel row
-    t: jax.Array  # (E,) int64-ish microsecond timestamps, stored int32 rel.
+    t: jax.Array  # (E,) int32 WINDOW-RELATIVE microseconds: t_abs - t_start
+    #   of the window (absolute int64 stamps never reach the device; the
+    #   packers subtract each window's origin, and the int64 -> int32
+    #   cast wraps — dual-threshold windows span < time_threshold_us so
+    #   in-contract deltas always fit exactly)
     p: jax.Array  # (E,) int32 polarity in {0, 1}
     valid: jax.Array  # (E,) bool validity mask
 
@@ -99,6 +103,248 @@ def unpack_words(words: jax.Array) -> tuple[jax.Array, jax.Array]:
     x = (w & jnp.uint32(0xFFFF)).astype(jnp.int32)
     y = (w >> jnp.uint32(16)).astype(jnp.int32)
     return x, y
+
+
+# ---------------------------------------------------------------------------
+# Ragged event wire: the compressed host->device ingest layout.
+#
+# The dense staging block ships four int32 planes plus a bool mask —
+# 17 bytes per event SLOT, padding included. The ragged wire ships only
+# real events (DESIGN.md Sec. 16):
+#
+#   words    (N,)      uint32  pack_words(x, y) — coords in one word
+#   dt       (N,)      uint16  t - window t_start (window-relative delta)
+#   pol      (N/32,)   uint32  polarity bitplane, little-endian bit order
+#   offsets  (S, W+1)  int32   CSR row offsets per (sensor, window)
+#   spill    (5, M)    int32   exact lane for out-of-range events:
+#                              rows are (position, x, y, dt, p)
+#
+# ~6.125 bytes per real event plus small offset/spill sidecars. Events
+# whose coords/delta/polarity do not fit the packed lanes ([0, 0xFFFF]
+# coords and deltas, {0, 1} polarity — everything a real sensor emits)
+# are ALSO written to the spill lane as the exact int32 values the dense
+# path would have shipped; the device overlay restores them, so decoding
+# is bit-identical to the dense planes for arbitrary inputs. N is padded
+# to WIRE_QUANTUM so the decoder compiles per occupancy bucket, not per
+# event count.
+# ---------------------------------------------------------------------------
+
+WIRE_QUANTUM = 512  # wire length bucket (multiple of 32 for the bitplane)
+SPILL_QUANTUM = 8  # spill lane length bucket
+# Padding entries in the spill lane point past any possible wire length,
+# so the decoder's mode="drop" scatter discards them.
+SPILL_SENTINEL = np.int32(2**31 - 1)
+
+_DT_MAX = 0xFFFF  # widest window-relative delta the packed lane holds
+
+
+def wire_pad(n: int) -> int:
+    """Events ``n`` rounded up to the wire-length bucket (minimum one)."""
+    return max(WIRE_QUANTUM, -(-n // WIRE_QUANTUM) * WIRE_QUANTUM)
+
+
+def spill_pad(m: int) -> int:
+    """Spill entries ``m`` rounded up to the spill bucket (0 stays 0)."""
+    return -(-m // SPILL_QUANTUM) * SPILL_QUANTUM
+
+
+def dense_wire_bytes(s: int, w: int, cap: int) -> int:
+    """Host->device bytes for one dense round: four int32 planes, the
+    bool validity mask, and the (2, S) int32 meta rows."""
+    return 17 * s * w * cap + 8 * s
+
+
+def ragged_wire_bytes(n_pad: int, s: int, w: int, m_pad: int) -> int:
+    """Host->device bytes for one ragged round: words + dt + bitplane
+    (6.125 B/slot over the padded wire length), CSR offsets, spill lane,
+    and the same (2, S) meta rows as the dense path."""
+    return (
+        4 * n_pad + 2 * n_pad + 4 * (n_pad // 32)  # words, dt, pol
+        + 4 * s * (w + 1)  # offsets
+        + 4 * 5 * m_pad  # spill
+        + 8 * s  # meta
+    )
+
+
+def _pack_bounds_ragged(
+    x: np.ndarray,
+    y: np.ndarray,
+    t: np.ndarray,
+    p: np.ndarray,
+    bounds: list[tuple[int, int, int]],
+    out: tuple[np.ndarray, ...],
+    *,
+    base: int,
+    capacity: int,
+    spill: bool,
+) -> tuple[np.ndarray, ...]:
+    """Ragged-mode core of :func:`pack_bounds_into` (one sensor's rows).
+
+    ``out`` is ``(words, dt, pbits, offsets_row)``: the shared 1-D wire
+    arrays (written from ``base``) plus this sensor's (>= W+1,) offsets
+    row. ``pbits`` is the per-event polarity byte scratch — the caller
+    packs it into the 32-bit bitplane once per round
+    (``np.packbits(..., bitorder="little")``), since bit packing does
+    not compose across unaligned per-sensor segments. Windows longer
+    than ``capacity`` truncate exactly like the dense planes do (the
+    drop count lands in ``overflow``). Returns
+    ``(starts, stops, t_start, overflow, new_base, spill_entries)`` with
+    ``spill_entries`` a (5, k) int32 block of (position, x, y, dt, p)
+    rows holding the exact int32 values the dense path would ship.
+    With ``spill=False`` an out-of-range event raises ``ValueError``
+    instead of wrapping into the packed lanes.
+    """
+    words, dt16, pbits, offsets_row = out
+    w = len(bounds)
+    starts = np.fromiter((b[0] for b in bounds), np.int64, count=w)
+    stops = np.fromiter((b[1] for b in bounds), np.int64, count=w)
+    t_start = np.fromiter((b[2] for b in bounds), np.int64, count=w)
+    n = np.minimum(stops - starts, np.int64(capacity))  # per-window rows
+    overflow = stops - starts - n
+    total = int(n.sum())
+    offsets_row[0] = base
+    offsets_row[1 : w + 1] = base + np.cumsum(n)
+    offsets_row[w + 1 :] = base + total  # padding windows: zero count
+    if not total:
+        return starts, stops, t_start, overflow, base, np.zeros((5, 0), np.int32)
+    if w == 1:
+        # Single-window fast path (the steady live-feed case): one slice
+        # copy per lane, mirroring the dense fast path.
+        s0 = int(starts[0])
+        xv = x[s0 : s0 + total]
+        yv = y[s0 : s0 + total]
+        tv = t[s0 : s0 + total] - t_start[0]
+        pv = p[s0 : s0 + total]
+    else:
+        cols = np.arange(total) - np.repeat(np.cumsum(n) - n, n)
+        src = np.repeat(starts, n) + cols
+        xv, yv, pv = x[src], y[src], p[src]
+        tv = t[src] - np.repeat(t_start, n)
+    dst = slice(base, base + total)
+    words[dst] = (
+        (yv.astype(np.uint32) & np.uint32(0xFFFF)) << np.uint32(16)
+    ) | (xv.astype(np.uint32) & np.uint32(0xFFFF))
+    dt16[dst] = tv.astype(np.uint16)
+    pbits[dst] = (pv & 1).astype(np.uint8)
+    wide = (
+        (xv < 0) | (xv > 0xFFFF) | (yv < 0) | (yv > 0xFFFF)
+        | (tv < 0) | (tv > _DT_MAX) | (pv < 0) | (pv > 1)
+    )
+    if not wide.any():
+        return starts, stops, t_start, overflow, base + total, np.zeros(
+            (5, 0), np.int32
+        )
+    if not spill:
+        k = int(np.argmax(wide))
+        raise ValueError(
+            f"event (x={int(xv[k])}, y={int(yv[k])}, dt={int(tv[k])}, "
+            f"p={int(pv[k])}) does not fit the packed wire lanes "
+            "(coords/deltas in [0, 65535], polarity in {0, 1}) and the "
+            "spill lane is disabled; enable spill or pre-filter the stream"
+        )
+    k = np.flatnonzero(wide)
+    # Exact int32 values, wrapping exactly like the dense path's
+    # int64 -> int32 plane assignment.
+    entries = np.stack([
+        (base + k).astype(np.int64),
+        xv[k], yv[k], tv[k], pv[k],
+    ]).astype(np.int32)
+    return starts, stops, t_start, overflow, base + total, entries
+
+
+def pack_wire(
+    x: np.ndarray,
+    y: np.ndarray,
+    t: np.ndarray,
+    p: np.ndarray,
+    bounds: list[tuple[int, int, int]],
+    capacity: int,
+    *,
+    spill: bool = True,
+) -> tuple[tuple[np.ndarray, ...], np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Allocate-and-pack one sensor's windows into ragged wire arrays.
+
+    Convenience wrapper over ``pack_bounds_into(layout="ragged")`` for
+    single-sensor callers (the streaming engine, tests): returns
+    ``(wire, starts, stops, t_start, overflow)`` where ``wire`` is the
+    ``(words, dt, pol, offsets, spill)`` tuple :func:`unpack_wire`
+    consumes, with ``offsets`` shaped (1, W+1) and the wire length
+    padded to :data:`WIRE_QUANTUM`. Rows longer than ``capacity`` are
+    truncated exactly like :func:`pack_bounds`.
+    """
+    w = len(bounds)
+    total = sum(min(e - s, capacity) for s, e, _ in bounds)
+    n_pad = wire_pad(total)
+    words = np.zeros(n_pad, np.uint32)
+    dt16 = np.zeros(n_pad, np.uint16)
+    pbits = np.zeros(n_pad, np.uint8)
+    offsets = np.zeros((1, w + 1), np.int32)
+    starts, stops, t_start, overflow, _, entries = pack_bounds_into(
+        x, y, t, p, bounds,
+        out=(words, dt16, pbits, offsets[0]),
+        layout="ragged", base=0, capacity=capacity, spill=spill,
+    )
+    pol = np.zeros(n_pad // 32, np.uint32)
+    if total:
+        packed_bits = np.packbits(pbits[:total], bitorder="little")
+        pol.view(np.uint8)[: len(packed_bits)] = packed_bits
+    m = entries.shape[1]
+    m_pad = spill_pad(m)
+    spill_lane = np.full((5, m_pad), SPILL_SENTINEL, np.int32)
+    spill_lane[:, :m] = entries
+    return (words, dt16, pol, offsets, spill_lane), starts, stops, t_start, overflow
+
+
+def unpack_wire(
+    words: jax.Array,
+    dt16: jax.Array,
+    pol: jax.Array,
+    offsets: jax.Array,
+    spill: jax.Array,
+    capacity: int,
+    unpack_impl=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Device-side ragged-wire decoder (trace-time jnp; DESIGN.md Sec. 16).
+
+    Reconstructs the dense staging planes bit-for-bit: returns
+    ``(packed, valid)`` with ``packed`` the (4, S, W, capacity) int32
+    x/y/t/p block and ``valid`` the (S, W, capacity) bool mask — exactly
+    what the fleet step consumes, so the compiled step is shared between
+    the dense and ragged ingest paths. ``unpack_impl`` overrides the
+    word unpack route (the Pallas ``event_unpack`` kernel when
+    ``config.use_kernels``; the jnp shift/mask path otherwise). Safe
+    inside an enclosing jit: every shape is static at trace time.
+
+    Bit-identity argument: packed lanes reconstruct exactly over their
+    ranges (coords/deltas in [0, 0xFFFF] zero-extend to the same
+    non-negative int32; polarity bits are the values); everything wider
+    was also written to the spill lane as the exact int32 the dense path
+    ships, and the overlay scatter restores it before the gather. Slots
+    past each window's count are forced to zero — the dense planes are
+    zero-filled — so even garbage in the padded wire tail is
+    unobservable.
+    """
+    n = words.shape[0]
+    dt16, pol, spill = (jnp.asarray(dt16), jnp.asarray(pol), jnp.asarray(spill))
+    xs, ys = (unpack_impl or unpack_words)(words)
+    ts = dt16.astype(jnp.int32)  # zero-extend: exact over [0, 0xFFFF]
+    bits = (
+        pol[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]
+    ) & jnp.uint32(1)
+    ps = bits.reshape(-1).astype(jnp.int32)
+    pos = spill[0]
+    xs = xs.at[pos].set(spill[1], mode="drop")
+    ys = ys.at[pos].set(spill[2], mode="drop")
+    ts = ts.at[pos].set(spill[3], mode="drop")
+    ps = ps.at[pos].set(spill[4], mode="drop")
+    counts = offsets[:, 1:] - offsets[:, :-1]  # (S, W)
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    src = offsets[:, :-1, None] + slot[None, None, :]  # (S, W, cap)
+    valid = slot[None, None, :] < counts[..., None]
+    take = jnp.clip(src, 0, n - 1)
+    gather = lambda a: jnp.where(valid, a[take], 0)
+    packed = jnp.stack([gather(xs), gather(ys), gather(ts), gather(ps)])
+    return packed, valid
 
 
 # ---------------------------------------------------------------------------
@@ -466,7 +712,11 @@ def pack_bounds_into(
     bv: np.ndarray | None = None,
     *,
     out: tuple[np.ndarray, ...] | None = None,
-) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    layout: str = "dense",
+    base: int = 0,
+    capacity: int | None = None,
+    spill: bool = True,
+) -> tuple[np.ndarray, ...]:
     """Numpy core of :func:`pack_bounds`: scatter windows into preallocated
     (>= W, capacity) arrays (rows past ``len(bounds)`` are left untouched).
 
@@ -478,7 +728,26 @@ def pack_bounds_into(
     staging buffers hand over, so a pipelined round packs in place with
     zero per-round allocation. Returns ``(starts, stops, t_start,
     overflow)``.
+
+    ``layout="ragged"`` writes the compressed event wire instead:
+    ``out`` becomes ``(words, dt, pbits, offsets_row)`` (see
+    :func:`_pack_bounds_ragged` — packed coordinate words from ``base``,
+    16-bit deltas, polarity bytes, this sensor's CSR offsets row) and
+    ``capacity`` bounds the per-window row length exactly like the dense
+    planes' trailing dim. The return grows to ``(starts, stops, t_start,
+    overflow, new_base, spill_entries)``; ``spill=False`` raises on any
+    event the packed lanes cannot hold exactly.
     """
+    if layout == "ragged":
+        if out is None or bx is not None:
+            raise TypeError("layout='ragged' requires the out= wire tuple")
+        if capacity is None:
+            raise TypeError("layout='ragged' requires capacity=")
+        return _pack_bounds_ragged(
+            x, y, t, p, bounds, out, base=base, capacity=capacity, spill=spill
+        )
+    if layout != "dense":
+        raise ValueError(f"unknown pack layout: {layout!r}")
     if out is not None:
         if bx is not None:
             raise TypeError("pass destination planes positionally OR as out=")

@@ -65,12 +65,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.events import (
+    SPILL_QUANTUM,
+    SPILL_SENTINEL,
     EventBatch,
     WindowedEvents,
+    dense_wire_bytes,
     dual_threshold_bounds,
     dual_threshold_closed_bounds,
     monotone_merge,
     pack_bounds_into,
+    ragged_wire_bytes,
+    spill_pad,
+    unpack_wire,
+    wire_pad,
 )
 from repro.core.grid_clustering import Clusters
 from repro.core.pipeline.config import PipelineConfig
@@ -80,6 +87,7 @@ from repro.core.tracking import TrackState, init_tracks
 from repro.distributed.sharding import (
     grow_fleet_carry,
     hint_fleet,
+    hint_wire,
     shard_fleet_carry,
     shrink_fleet_carry,
 )
@@ -208,6 +216,114 @@ def make_fleet_fn(config: PipelineConfig = PipelineConfig(), with_tracking: bool
         return final, clusters, mets, states, hint_fleet(atlas)
 
     return jax.jit(step, donate_argnums=(3,), static_argnums=(5,))
+
+
+@functools.lru_cache(maxsize=None)
+def make_wire_fn(capacity: int, use_kernels: bool):
+    """Jit'd ragged-wire decoder: compressed wire -> dense step inputs.
+
+        (words (N,) uint32, dt (N,) uint16, pol (N/32,) uint32,
+         offsets (S, W+1) int32, spill (5, M) int32) ->
+            (packed (4, S, W, cap) int32, valid (S, W, cap) bool)
+
+    Deliberately a SEPARATE jit in front of the fleet step, not fused
+    into it: the wire length N varies with occupancy (bucketed to
+    ``WIRE_QUANTUM``), and folding it into the step's compile key would
+    break the one-compile-per-capacity-tier discipline the service pins
+    (tests/test_serve_service.py). The decoder's outputs have exactly
+    the dense staging shapes/dtypes, so the step's compiled cache is
+    shared between both wire modes; decoder compiles are cheap (a few
+    elementwise ops + one gather) and bounded by the occupancy buckets.
+    ``use_kernels`` routes the word unpack through the Pallas
+    ``event_unpack`` kernel (interpret mode off TPU), mirroring the
+    quantize/accum routing; the jnp shift/mask path is the default.
+    Sensor-axis sharding hints keep the reconstructed planes partitioned
+    like the rest of the carry when a mesh is active.
+    """
+    if use_kernels:
+        from repro.kernels.ops import event_unpack_call  # lazy, like config
+        unpack_impl = event_unpack_call
+    else:
+        unpack_impl = None
+
+    def decode(words, dt16, pol, offsets, spill):
+        packed, valid = unpack_wire(
+            words, dt16, pol, offsets, spill, capacity, unpack_impl
+        )
+        packed, valid, _ = hint_wire(packed, valid, offsets)
+        return packed, valid
+
+    return jax.jit(decode)
+
+
+@functools.lru_cache(maxsize=1)
+def _pinned_host_sharding():
+    """Pinned-host placement for wire staging, when the backend has one.
+
+    On accelerator backends whose devices expose a ``pinned_host``
+    memory space (TPU/GPU runtimes), host->device DMA from pinned pages
+    avoids a driver-side bounce copy; the ragged dispatch routes its
+    wire views through this placement first. CPU backends (host memory
+    IS device memory) and runtimes without the memory space return
+    ``None`` and the views ship as plain numpy — behaviour, and bits,
+    are identical either way.
+    """
+    if jax.default_backend() == "cpu":
+        return None
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        if "pinned_host" not in kinds:
+            return None
+        return jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+    except Exception:  # pragma: no cover - runtime-dependent introspection
+        return None
+
+
+def _stage_wire(views: tuple) -> tuple:
+    """Bounce the per-round wire views through pinned host memory when
+    the backend supports it (see :func:`_pinned_host_sharding`)."""
+    sharding = _pinned_host_sharding()
+    if sharding is None:
+        return views
+    try:
+        return tuple(jax.device_put(v, sharding) for v in views)
+    except Exception:  # pragma: no cover - degrade to plain numpy inputs
+        return views
+
+
+@dataclasses.dataclass
+class WireStats:
+    """Host->device ingest transfer accounting, accumulated per round.
+
+    ``wire_bytes`` counts what the active wire mode actually ships;
+    ``dense_bytes`` is the dense-equivalent cost of the same rounds
+    (identical, by construction, when ``wire="dense"``), so
+    ``compression`` is the measured transfer reduction the ragged wire
+    delivers at the workload's real occupancy.
+    """
+
+    rounds: int = 0
+    events: int = 0  # real (valid) events shipped
+    wire_bytes: int = 0
+    dense_bytes: int = 0
+    spilled: int = 0  # events that took the exact int32 spill lane
+
+    @property
+    def compression(self) -> float:
+        """Dense-equivalent bytes over shipped bytes (>= 1 when winning)."""
+        return self.dense_bytes / self.wire_bytes if self.wire_bytes else 0.0
+
+    @property
+    def wire_bytes_per_round(self) -> float:
+        return self.wire_bytes / self.rounds if self.rounds else 0.0
+
+    def add(self, other: "WireStats") -> None:
+        self.rounds += other.rounds
+        self.events += other.events
+        self.wire_bytes += other.wire_bytes
+        self.dense_bytes += other.dense_bytes
+        self.spilled += other.spilled
 
 
 @functools.lru_cache(maxsize=None)
@@ -472,6 +588,38 @@ class _StagingSet:
         self.inflight: PendingRound | None = None
 
 
+class _RaggedStagingSet:
+    """Staging buffers for the compressed ragged wire (DESIGN.md Sec. 16):
+    1-D word/delta/polarity lanes sized for the worst case (every slot of
+    every window full), the CSR offsets block, and a growable spill lane.
+    Unlike the dense set, acquire never zero-fills these: every round
+    rewrites each sensor's full offsets row and the decoder's masked
+    gather makes stale bytes past the round's event total unobservable
+    (see ``unpack_wire``); only the spill view is re-sentineled per round
+    — a stale spill entry WOULD scatter into live wire positions."""
+
+    __slots__ = (
+        "words", "dt", "pbits", "pol", "offsets", "spill", "meta", "inflight"
+    )
+
+    def __init__(self, s: int, w: int, cap: int):
+        n_max = wire_pad(s * w * cap)
+        self.words = np.zeros(n_max, np.uint32)
+        self.dt = np.zeros(n_max, np.uint16)
+        self.pbits = np.zeros(n_max, np.uint8)  # packbits scratch
+        self.pol = np.zeros(n_max // 32, np.uint32)
+        self.offsets = np.zeros((s, w + 1), np.int32)
+        self.spill = np.full((5, 4 * SPILL_QUANTUM), SPILL_SENTINEL, np.int32)
+        self.inflight: PendingRound | None = None
+        self.meta = np.zeros((2, s), np.int32)
+
+    def reserve_spill(self, m_pad: int) -> None:
+        """Grow the spill lane to hold ``m_pad`` entries (amortized)."""
+        if m_pad > self.spill.shape[1]:
+            grown = spill_pad(max(m_pad, 2 * self.spill.shape[1]))
+            self.spill = np.full((5, grown), SPILL_SENTINEL, np.int32)
+
+
 class _StagingPool:
     """Depth-deep ring of reusable staging sets per packed-block shape.
 
@@ -489,13 +637,15 @@ class _StagingPool:
         if depth < 1:
             raise ValueError(f"staging depth must be >= 1, got {depth}")
         self.depth = depth
-        self._rings: dict[tuple[int, int, int], list] = {}  # key -> [ix, sets]
+        # (s, w, cap, wire) -> [ix, sets]
+        self._rings: dict[tuple[int, int, int, str], list] = {}
 
-    def acquire(self, s: int, w: int, cap: int) -> _StagingSet:
-        key = (s, w, cap)
+    def acquire(self, s: int, w: int, cap: int, wire: str = "dense"):
+        key = (s, w, cap, wire)
         ring = self._rings.pop(key, None)
         if ring is None:
-            ring = [0, [_StagingSet(s, w, cap) for _ in range(self.depth)]]
+            cls = _RaggedStagingSet if wire == "ragged" else _StagingSet
+            ring = [0, [cls(s, w, cap) for _ in range(self.depth)]]
         self._rings[key] = ring  # reinsert: dict order is the LRU order
         while len(self._rings) > _MAX_STAGING_SHAPES:
             self._rings.pop(next(iter(self._rings)))
@@ -505,8 +655,9 @@ class _StagingPool:
         if st.inflight is not None:
             st.inflight.wait()
             st.inflight = None
-        st.packed.fill(0)
-        st.valid.fill(0)
+        if wire == "dense":
+            st.packed.fill(0)
+            st.valid.fill(0)
         return st
 
 
@@ -546,6 +697,15 @@ class FleetPipeline:
     into ``staging_depth`` preallocated staging buffer sets per packed
     shape (double buffering by default) instead of allocating per round;
     a set is refilled only after the round borrowing it has completed.
+
+    ``wire`` selects the host->device ingest format (DESIGN.md Sec. 16):
+    ``"ragged"`` (the default) ships the compressed event wire — packed
+    coordinate words, 16-bit window-relative deltas, a polarity
+    bitplane, CSR offsets, and an exact spill lane — and reconstructs
+    the dense staging planes in a separate jit'd decoder in front of the
+    step, bit-identically; ``"dense"`` ships the (4, S, W, cap) planes
+    directly. Both modes share the step's compiled cache; per-round
+    transfer sizes accumulate in :attr:`wire_stats` either way.
     """
 
     def __init__(
@@ -557,15 +717,25 @@ class FleetPipeline:
         state: FleetState | None = None,
         uniform_fast_path: bool = True,
         staging_depth: int = 2,
+        wire: str = "ragged",
     ):
         if n_sensors < 1:
             raise ValueError(f"n_sensors must be >= 1, got {n_sensors}")
+        if wire not in ("dense", "ragged"):
+            raise ValueError(f"unknown wire mode: {wire!r}")
         self.config = config
         self.n_sensors = n_sensors
         self.with_tracking = with_tracking
         self.mesh = mesh
         self.uniform_fast_path = uniform_fast_path
+        self.wire = wire
+        self.wire_stats = WireStats()
         self._step = make_fleet_fn(config, with_tracking)
+        self._wire = (
+            make_wire_fn(config.batcher.capacity, config.use_kernels)
+            if wire == "ragged"
+            else None
+        )
         self._tag_limit = tag_limit(config)
         self._staging = _StagingPool(staging_depth)
         self.state = self.init_state() if state is None else state
@@ -830,14 +1000,20 @@ class FleetPipeline:
         # still executing — the pipelined-depth backpressure point), so
         # the steady state allocates nothing per round.
         cap = batcher.capacity
+        ragged = self.wire == "ragged"
         staging = (
-            self._staging.acquire(s_count, w_max, cap) if w_max else None
+            self._staging.acquire(s_count, w_max, cap, wire=self.wire)
+            if w_max
+            else None
         )
-        if staging is None:
+        if staging is None or ragged:
             bx = by = bt = bp = bv = None
         else:
             bx, by, bt, bp = staging.packed
             bv = staging.valid
+        wire_base = 0  # running write cursor into the shared wire lanes
+        spill_blocks: list[np.ndarray] = []
+        events_total = 0
         tag0 = np.zeros(s_count, np.int32)
         reset = np.zeros(s_count, bool)
         windows_list: list[WindowedEvents] = []
@@ -853,6 +1029,30 @@ class FleetPipeline:
                 row = EventBatch(
                     zeros, zeros, zeros, zeros, np.zeros((0, cap), bool)
                 )
+            elif ragged:
+                starts, stops, t_start, overflow, wire_base, entries = (
+                    pack_bounds_into(
+                        *merged, bounds3,
+                        out=(staging.words, staging.dt, staging.pbits,
+                             staging.offsets[s]),
+                        layout="ragged", base=wire_base, capacity=cap,
+                    )
+                )
+                if entries.shape[1]:
+                    spill_blocks.append(entries)
+                n = len(bounds)
+                # Bookkeeping rows are fresh dense planes (the ragged
+                # wire has no per-window rows to copy out): same packer,
+                # same bits, and like the dense path's copies they stay
+                # stable for the round's lifetime.
+                rx = np.zeros((n, cap), np.int32)
+                ry = np.zeros((n, cap), np.int32)
+                rt = np.zeros((n, cap), np.int32)
+                rp = np.zeros((n, cap), np.int32)
+                rv = np.zeros((n, cap), bool)
+                if n:
+                    pack_bounds_into(*merged, bounds3, rx, ry, rt, rp, rv)
+                row = EventBatch(rx, ry, rt, rp, rv)
             else:
                 starts, stops, t_start, overflow = pack_bounds_into(
                     *merged, bounds3, out=(bx[s], by[s], bt[s], bp[s], bv[s])
@@ -866,6 +1066,7 @@ class FleetPipeline:
                     bx[s, :n].copy(), by[s, :n].copy(), bt[s, :n].copy(),
                     bp[s, :n].copy(), bv[s, :n].copy(),
                 )
+            events_total += int(np.minimum(stops - starts, cap).sum())
             n = len(bounds)
             base = cur.events_consumed
             windows_list.append(
@@ -894,14 +1095,50 @@ class FleetPipeline:
 
         staging.meta[0] = tag0
         staging.meta[1] = n_valid
+        if ragged:
+            n_pad = wire_pad(wire_base)
+            m = 0
+            if spill_blocks:
+                entries = np.concatenate(spill_blocks, axis=1)
+                m = entries.shape[1]
+            m_pad = spill_pad(m)
+            staging.reserve_spill(m_pad)
+            # Re-sentinel the whole view EVERY round: a stale spill entry
+            # from a previous borrower points at live wire positions and
+            # would overwrite real events in the decoder's scatter.
+            staging.spill[:, :m_pad] = SPILL_SENTINEL
+            if m:
+                staging.spill[:, :m] = entries
+                self.wire_stats.spilled += m
+            if wire_base:
+                packed_bits = np.packbits(
+                    staging.pbits[:wire_base], bitorder="little"
+                )
+                staging.pol.view(np.uint8)[: len(packed_bits)] = packed_bits
+            views = _stage_wire((
+                staging.words[:n_pad], staging.dt[:n_pad],
+                staging.pol[: n_pad // 32], staging.offsets,
+                staging.spill[:, :m_pad],
+            ))
+            wire_b = ragged_wire_bytes(n_pad, s_count, w_max, m_pad)
+        else:
+            wire_b = dense_wire_bytes(s_count, w_max, cap)
         with self._mesh_ctx():
             atlas_in = st.atlas
             if reset.any():  # rare: tag-epoch rollover on some sensor(s)
                 atlas_in = _zero_sensors_fn()(atlas_in, jnp.asarray(reset))
+            if ragged:
+                packed_in, valid_in = self._wire(*views)
+            else:
+                packed_in, valid_in = staging.packed, bv
             final_tracks, clusters, mets, states, atlas = self._step(
-                staging.packed, bv, st.tracks, atlas_in, staging.meta,
+                packed_in, valid_in, st.tracks, atlas_in, staging.meta,
                 self.uniform_fast_path and bool((n_valid == w_max).all()),
             )
+        self.wire_stats.rounds += 1
+        self.wire_stats.events += events_total
+        self.wire_stats.wire_bytes += wire_b
+        self.wire_stats.dense_bytes += dense_wire_bytes(s_count, w_max, cap)
         self.state = FleetState(
             cursors=st.cursors, atlas=atlas, tracks=final_tracks
         )

@@ -35,11 +35,15 @@ import numpy as np
 
 from repro.core import metrics as M
 from repro.core.events import (
+    EventBatch,
     WindowedEvents,
+    dense_wire_bytes,
     dual_threshold_bounds,
     dual_threshold_closed_bounds,
     monotone_merge,
     pack_bounds,
+    pack_wire,
+    ragged_wire_bytes,
 )
 from repro.core.grid_clustering import Clusters
 from repro.core.pipeline.config import PipelineConfig
@@ -124,10 +128,27 @@ class StreamingPipeline:
         config: PipelineConfig = PipelineConfig(),
         with_tracking: bool = True,
         state: StreamState | None = None,
+        wire: str = "dense",
     ):
+        if wire not in ("dense", "ragged"):
+            raise ValueError(f"unknown wire mode: {wire!r}")
         self.config = config
         self.with_tracking = with_tracking
+        self.wire = wire
         self._step = make_stream_fn(config, with_tracking)
+        # Lazy import: fleet.py imports this module at load time, so the
+        # wire machinery (shared with the fleet engine) has to come in at
+        # construction, not at module import.
+        from repro.core.pipeline.fleet import (
+            WireStats, _stage_wire, make_wire_fn,
+        )
+
+        self.wire_stats = WireStats()
+        if wire == "ragged":
+            self._wire = make_wire_fn(config.batcher.capacity, config.use_kernels)
+            self._stage_wire = _stage_wire
+        else:
+            self._wire = None
         self._tag_limit = tag_limit(config)
         self.state = self.init_state() if state is None else state
 
@@ -211,11 +232,39 @@ class StreamingPipeline:
         st = self.state
         px, py, pt, pp = pending
         last_t = int(pt[-1]) if len(pt) else st.last_t
-        windows = pack_bounds(
-            px, py, pt, pp,
-            [(s, e, int(pt[s])) for s, e in bounds],
-            self.config.batcher.capacity,
-        )
+        cap = self.config.batcher.capacity
+        bounds3 = [(s, e, int(pt[s])) for s, e in bounds]
+        if self.wire == "ragged" and n:
+            # Compressed ingest: pack the ragged wire on host, decode to
+            # the dense (W, cap) planes device-side — bit-identical to
+            # pack_bounds (see events.unpack_wire), one sensor row.
+            wire, starts, stops, t_start, overflow = pack_wire(
+                px, py, pt, pp, bounds3, cap
+            )
+            packed, valid = self._wire(*self._stage_wire(wire))
+            batch = EventBatch(
+                packed[0, 0], packed[1, 0], packed[2, 0], packed[3, 0],
+                valid[0],
+            )
+            windows = WindowedEvents(batch, t_start, starts, stops, overflow)
+            self.wire_stats.rounds += 1
+            self.wire_stats.events += int(
+                np.minimum(stops - starts, cap).sum()
+            )
+            self.wire_stats.wire_bytes += ragged_wire_bytes(
+                wire[0].shape[0], 1, n, wire[4].shape[1]
+            )
+            self.wire_stats.dense_bytes += dense_wire_bytes(1, n, cap)
+        else:
+            windows = pack_bounds(px, py, pt, pp, bounds3, cap)
+            if n:
+                b = dense_wire_bytes(1, n, cap)
+                self.wire_stats.rounds += 1
+                self.wire_stats.events += int(
+                    np.minimum(windows.stops - windows.starts, cap).sum()
+                )
+                self.wire_stats.wire_bytes += b
+                self.wire_stats.dense_bytes += b
         # Slice indices are stream-global, like pad_windows over the
         # whole recording.
         windows = windows._replace(

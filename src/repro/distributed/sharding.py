@@ -259,6 +259,24 @@ def hint_fleet(tree: Any) -> Any:
     return jax.tree.map(lambda a: hint(a, SENSOR_AXIS), tree)
 
 
+def hint_wire(packed: jax.Array, valid: jax.Array, offsets: jax.Array):
+    """Sensor-axis hints for the ragged-wire decoder surfaces.
+
+    The 1-D wire streams (words/dt/pol/spill) are occupancy-ordered, not
+    sensor-partitioned, so they stay replicated; the CSR ``offsets``
+    (S, W+1) and the reconstructed dense ``packed`` (4, S, W, cap) /
+    ``valid`` (S, W, cap) planes carry the sensor dim and shard over the
+    ``sensor`` mesh axis like every other fleet carry leaf — the gather
+    that builds them is then partitioned per device's sensor slice.
+    Identity without an active mesh, like :func:`hint`.
+    """
+    return (
+        hint(packed, None, SENSOR_AXIS),
+        hint(valid, SENSOR_AXIS),
+        hint(offsets, SENSOR_AXIS),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Activation sharding hints (no-ops without a mesh context).
 # ---------------------------------------------------------------------------

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for the event-wire word unpack (DESIGN.md Sec. 16).
+
+The inverse of the paper's Sec. IV-B packing stage, run device-side on
+the compressed ragged ingest wire: each 32-bit word carries
+``x = bits[15:0]`` and ``y = bits[31:16]``; the kernel splits a VMEM
+tile of words into two int32 coordinate planes with one shift and one
+mask per lane. Mirrors :mod:`repro.kernels.grid_quantize`'s layout —
+8x128 VPU tiles of packed words — and like every kernel here it runs
+compiled on TPU and interpreted elsewhere (``ops.py`` picks).
+
+Zero-extension contract: lane values land in [0, 0xFFFF], so the int32
+planes are exactly the values :func:`repro.core.events.unpack_words`
+produces — the decoder's bit-identity rests on the two routes agreeing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-native tile: 8 sublanes x 128 lanes of 32-bit words.
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+
+
+def _kernel(words_ref, x_ref, y_ref):
+    w = words_ref[...].astype(jnp.uint32)
+    x_ref[...] = (w & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    y_ref[...] = (w >> jnp.uint32(16)).astype(jnp.int32)
+
+
+def event_unpack(
+    words: jax.Array, *, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Unpack a 2D array of packed 32-bit event words into (x, y) planes.
+
+    ``words``: (R, 128) uint32 with R a multiple of 8 (``ops.py`` pads
+    arbitrary 1-D wire streams into this layout). Returns two int32
+    arrays of the same shape.
+    """
+    if words.ndim != 2 or words.shape[1] != BLOCK_COLS:
+        raise ValueError(f"expected (R, {BLOCK_COLS}) layout, got {words.shape}")
+    rows = words.shape[0]
+    if rows % BLOCK_ROWS:
+        raise ValueError(f"rows ({rows}) must be a multiple of {BLOCK_ROWS}")
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(words.shape, jnp.int32),
+            jax.ShapeDtypeStruct(words.shape, jnp.int32),
+        ),
+        interpret=interpret,
+    )(words)

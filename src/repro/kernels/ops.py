@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cluster_accum as _ca
+from repro.kernels import event_unpack as _eu
 from repro.kernels import grid_quantize as _gq
 from repro.kernels import patch_metrics as _pm
 from repro.kernels import window_entropy as _we
@@ -48,6 +49,29 @@ def grid_quantize_packed(
         padded.reshape(-1, _gq.BLOCK_COLS), cell_size, interpret=interpret
     )
     return out.reshape(-1)[:n]
+
+
+def event_unpack_call(
+    words: jax.Array, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Trace-time event-word unpack for the ragged ingest decoder.
+
+    Takes a 1-D uint32 wire stream of any length, pads to the kernel's
+    (8, 128) tile, and returns the first N (x, y) int32 coordinates —
+    the same values :func:`repro.core.events.unpack_words` yields. No
+    jit wrapper: every shape is static at trace time, so this is safe
+    inside the enclosing wire-decoder jit without nesting a dispatch
+    boundary.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    n = words.shape[0]
+    tile = _eu.BLOCK_ROWS * _eu.BLOCK_COLS
+    n_pad = -(-n // tile) * tile
+    padded = _pad_to(words.astype(jnp.uint32), n_pad)
+    x, y = _eu.event_unpack(
+        padded.reshape(-1, _eu.BLOCK_COLS), interpret=interpret
+    )
+    return x.reshape(-1)[:n], y.reshape(-1)[:n]
 
 
 def cluster_accum_call(

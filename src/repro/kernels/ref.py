@@ -20,6 +20,14 @@ def grid_quantize_packed_ref(words: jax.Array, cell_size: int = 16) -> jax.Array
     return (cy << jnp.uint32(16)) | cx
 
 
+def event_unpack_ref(words: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.event_unpack.event_unpack (any shape)."""
+    w = words.astype(jnp.uint32)
+    x = (w & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    y = (w >> jnp.uint32(16)).astype(jnp.int32)
+    return x, y
+
+
 def cluster_accum_ref(
     x: jax.Array,
     y: jax.Array,

@@ -347,6 +347,7 @@ class ConstellationService:
         rebalance_margin: int = 2,
         auto_rebalance: bool = True,
         rescue_after_degraded_rounds: int | None = None,
+        wire: str = "ragged",
     ):
         if rebalance_margin < 1:
             raise ValueError(
@@ -382,6 +383,7 @@ class ConstellationService:
                         clock=clock,
                         sleep=sleep,
                         max_inflight_rounds=max_inflight_rounds,
+                        wire=wire,
                     ),
                     devices=group,
                     mesh=mesh,
@@ -408,6 +410,17 @@ class ConstellationService:
     def n_sessions(self) -> int:
         """Constellation-live sessions across all shards."""
         return len(self._routes)
+
+    @property
+    def wire_stats(self):
+        """Aggregate ingest transfer accounting over every shard's fleet
+        (``WireStats`` — see :class:`~repro.serve.service.DetectionService`)."""
+        from repro.core.pipeline.fleet import WireStats
+
+        total = WireStats()
+        for shard in self._shards:
+            total.add(shard.service.wire_stats)
+        return total
 
     @property
     def capacity(self) -> int:

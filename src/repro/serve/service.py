@@ -167,6 +167,11 @@ class DetectionService:
     flushes instead apply backpressure by retiring the oldest round.
     Outputs are bit-identical at every depth for any chunking/churn
     schedule.
+
+    ``wire`` selects the host->device ingest format (``"ragged"`` — the
+    compressed event wire, the default — or ``"dense"``); outputs are
+    bit-identical either way and per-round transfer sizes accumulate in
+    :attr:`wire_stats`. See DESIGN.md Sec. 16.
     """
 
     def __init__(
@@ -180,6 +185,7 @@ class DetectionService:
         clock: Callable[[], float] = time.monotonic,
         sleep: Callable[[float], None] = time.sleep,
         max_inflight_rounds: int = 1,
+        wire: str = "ragged",
     ):
         if not tiers or list(tiers) != sorted(set(tiers)):
             raise ValueError(f"tiers must be strictly increasing, got {tiers}")
@@ -207,6 +213,7 @@ class DetectionService:
             # so packing round N never waits on a buffer still borrowed
             # by an unretired round.
             staging_depth=max(2, max_inflight_rounds),
+            wire=wire,
         )
         self._sessions: dict[int, SensorSession] = {}  # all states
         self._by_slot: dict[int, int] = {}  # slot -> sid, live only
@@ -233,6 +240,12 @@ class DetectionService:
     def capacity(self) -> int:
         """Current slot-pool capacity (the active tier)."""
         return self._fleet.n_sensors
+
+    @property
+    def wire_stats(self):
+        """Ingest transfer accounting (``WireStats``): bytes shipped per
+        round on the active wire mode vs the dense-equivalent cost."""
+        return self._fleet.wire_stats
 
     @property
     def n_sessions(self) -> int:

@@ -1,0 +1,432 @@
+"""Compressed event-wire format (DESIGN.md Sec. 16; ISSUE 10).
+
+Four layers of differential coverage over the ragged ingest path:
+
+* word-level properties — ``pack_words``/``unpack_words`` roundtrip
+  composed with 16-bit masking vs a numpy oracle, over negative coords,
+  boundary values, and OOB sentinels (hypothesis via ``_hyp``);
+* wire-level — ``pack_wire`` + ``unpack_wire`` reconstruct the dense
+  ``pack_bounds`` planes bit-for-bit, including events that take the
+  exact int32 spill lane, with the jnp route and the Pallas
+  ``event_unpack`` kernel route agreeing; ``spill=False`` raises instead
+  of wrapping;
+* engine-level — fleet and streaming drivers produce bit-identical
+  per-session outputs under ``wire="ragged"`` vs ``wire="dense"`` for
+  randomized chunking, idle sensors, and spill-forcing windows;
+* service-level — ``DetectionService`` differential at pipeline depths
+  1 and 3 under attach/detach churn, on the float, fixed-point, and
+  megakernel datapaths, plus the wire-stats compression accounting.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from test_serve_service import FakeClock, _spaced_stream
+
+from repro.core.events import (
+    SPILL_QUANTUM,
+    SPILL_SENTINEL,
+    WIRE_QUANTUM,
+    BatcherConfig,
+    dense_wire_bytes,
+    pack_bounds,
+    pack_bounds_into,
+    pack_wire,
+    pack_words,
+    ragged_wire_bytes,
+    spill_pad,
+    unpack_wire,
+    unpack_words,
+    wire_pad,
+)
+from repro.core.pipeline import FleetPipeline, PipelineConfig, StreamingPipeline
+from repro.core.pipeline.config import BatcherConfig as _BatcherAlias  # noqa: F401
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.serve import AdmissionConfig, DetectionService
+from repro.serve.chaos import compare_outputs, concat_outputs
+
+CONFIG = PipelineConfig()
+FIXED = dataclasses.replace(CONFIG, numerics="fixed")
+MEGA = dataclasses.replace(CONFIG, numerics="fixed", metrics_impl="megakernel")
+
+# Values that stress the 16-bit lanes: in-range, both boundaries, just
+# past, negative, and the full-word sentinel.
+EDGE_COORDS = [0, 1, 255, 0xFFFF, 0x10000, -1, -0x8000, 0x7FFFFFFF, -0x80000000]
+
+
+# ---------------------------------------------------------------------------
+# Word-level properties: pack_words / unpack_words.
+# ---------------------------------------------------------------------------
+
+def _mask16(v: np.ndarray) -> np.ndarray:
+    """Numpy oracle: the int32 value a packed 16-bit lane reconstructs."""
+    return (np.asarray(v).astype(np.int64) & 0xFFFF).astype(np.int32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(-(2**31), 2**31 - 1), st.integers(-(2**31), 2**31 - 1)
+        ),
+        min_size=1,
+        max_size=64,
+    )
+)
+def test_pack_unpack_words_roundtrip_masked(pairs):
+    """unpack(pack(x, y)) == (x & 0xFFFF, y & 0xFFFF) as int32, for ANY
+    int32 input — the packed word keeps exactly the low 16 bits."""
+    x = np.array([a for a, _ in pairs], np.int64)
+    y = np.array([b for _, b in pairs], np.int64)
+    ux, uy = unpack_words(pack_words(jax.numpy.asarray(x), jax.numpy.asarray(y)))
+    np.testing.assert_array_equal(np.asarray(ux), _mask16(x))
+    np.testing.assert_array_equal(np.asarray(uy), _mask16(y))
+
+
+def test_pack_unpack_words_edge_values():
+    """Boundary sweep: every (x, y) pair from the edge set roundtrips to
+    its masked value, and in-range values roundtrip exactly."""
+    xs, ys = np.meshgrid(EDGE_COORDS, EDGE_COORDS)
+    x, y = xs.ravel(), ys.ravel()
+    ux, uy = unpack_words(pack_words(jax.numpy.asarray(x), jax.numpy.asarray(y)))
+    np.testing.assert_array_equal(np.asarray(ux), _mask16(x))
+    np.testing.assert_array_equal(np.asarray(uy), _mask16(y))
+    inr = (x >= 0) & (x <= 0xFFFF) & (y >= 0) & (y <= 0xFFFF)
+    np.testing.assert_array_equal(np.asarray(ux)[inr], x[inr])
+    np.testing.assert_array_equal(np.asarray(uy)[inr], y[inr])
+
+
+def test_pack_words_oob_sentinel():
+    """The all-ones word (the coincidence sort's invalid-key sentinel)
+    unpacks to (0xFFFF, 0xFFFF) — and only (x,y)=(0xFFFF,0xFFFF) packs
+    to it, so sentinel keys can never collide with in-ROI pixels."""
+    w = np.asarray(pack_words(
+        jax.numpy.asarray([0xFFFF]), jax.numpy.asarray([0xFFFF])
+    ))
+    assert w[0] == np.uint32(0xFFFFFFFF)
+    x, y = unpack_words(jax.numpy.asarray([np.uint32(0xFFFFFFFF)]))
+    assert (int(x[0]), int(y[0])) == (0xFFFF, 0xFFFF)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=48),
+)
+def test_event_unpack_kernel_matches_ref_and_jnp(words):
+    """The Pallas event_unpack route (interpret on CPU) equals both the
+    jnp ref oracle and unpack_words, for arbitrary 32-bit words at
+    arbitrary (padded) lengths."""
+    w = jax.numpy.asarray(np.array(words, np.uint32))
+    kx, ky = kops.event_unpack_call(w)
+    rx, ry = kref.event_unpack_ref(w)
+    jx, jy = unpack_words(w)
+    np.testing.assert_array_equal(np.asarray(kx), np.asarray(rx))
+    np.testing.assert_array_equal(np.asarray(ky), np.asarray(ry))
+    np.testing.assert_array_equal(np.asarray(kx), np.asarray(jx))
+    np.testing.assert_array_equal(np.asarray(ky), np.asarray(jy))
+
+
+# ---------------------------------------------------------------------------
+# Wire-level: pack_wire / unpack_wire vs the dense planes.
+# ---------------------------------------------------------------------------
+
+def _window_stream(seed, n=700, span_us=120_000, garbage=False):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 640, n).astype(np.int64)
+    y = rng.integers(0, 480, n).astype(np.int64)
+    t = np.sort(rng.integers(0, span_us, n))
+    p = rng.integers(0, 2, n).astype(np.int64)
+    if garbage:
+        # Values a real sensor never emits — the spill lane's job.
+        x[5], y[9], p[13], x[17] = -3, 70_000, 7, 2**33 + 11
+    return x, y, t, p
+
+
+def _bounds3(t, batcher):
+    from repro.core.events import dual_threshold_bounds
+
+    return [(s, e, int(t[s])) for s, e in dual_threshold_bounds(t, batcher)]
+
+
+@pytest.mark.parametrize("garbage", [False, True])
+@pytest.mark.parametrize("kernel_route", [False, True])
+def test_wire_roundtrip_matches_dense_planes(garbage, kernel_route):
+    batcher = BatcherConfig()
+    x, y, t, p = _window_stream(3, garbage=garbage)
+    bounds3 = _bounds3(t, batcher)
+    wire, starts, stops, t_start, overflow = pack_wire(
+        x, y, t, p, bounds3, batcher.capacity
+    )
+    impl = kops.event_unpack_call if kernel_route else None
+    packed, valid = unpack_wire(*wire, batcher.capacity, unpack_impl=impl)
+    dense = pack_bounds(x, y, t, p, bounds3, batcher.capacity)
+    np.testing.assert_array_equal(np.asarray(packed[0, 0]), np.asarray(dense.batch.x))
+    np.testing.assert_array_equal(np.asarray(packed[1, 0]), np.asarray(dense.batch.y))
+    np.testing.assert_array_equal(np.asarray(packed[2, 0]), np.asarray(dense.batch.t))
+    np.testing.assert_array_equal(np.asarray(packed[3, 0]), np.asarray(dense.batch.p))
+    np.testing.assert_array_equal(np.asarray(valid[0]), np.asarray(dense.batch.valid))
+    np.testing.assert_array_equal(starts, dense.starts)
+    np.testing.assert_array_equal(stops, dense.stops)
+    np.testing.assert_array_equal(t_start, dense.t_start_us)
+    np.testing.assert_array_equal(overflow, dense.overflow)
+    spill = wire[4]
+    if garbage:
+        assert spill.shape[1] >= 4  # the injected events took the lane
+    else:
+        assert spill.shape[1] == 0
+
+
+def test_wire_capacity_truncation_matches_dense():
+    """Windows longer than capacity truncate identically on both layouts
+    (same kept prefix, same overflow counts)."""
+    batcher = BatcherConfig(capacity=32, size_threshold=200)
+    x, y, t, p = _window_stream(7, n=500, span_us=50_000)
+    bounds3 = _bounds3(t, batcher)
+    wire, starts, stops, t_start, overflow = pack_wire(
+        x, y, t, p, bounds3, batcher.capacity
+    )
+    packed, valid = unpack_wire(*wire, batcher.capacity)
+    dense = pack_bounds(x, y, t, p, bounds3, batcher.capacity)
+    assert overflow.sum() > 0  # the case actually triggers
+    np.testing.assert_array_equal(overflow, dense.overflow)
+    for lane, ref in zip(packed, (dense.batch.x, dense.batch.y, dense.batch.t, dense.batch.p)):
+        np.testing.assert_array_equal(np.asarray(lane[0]), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(valid[0]), np.asarray(dense.batch.valid))
+
+
+def test_wire_overflow_guard_raises_without_spill():
+    """With the spill lane disabled, an event the packed lanes cannot
+    hold exactly raises (never silently wraps)."""
+    batcher = BatcherConfig()
+    x, y, t, p = _window_stream(3, garbage=True)
+    with pytest.raises(ValueError, match="spill lane is disabled"):
+        pack_wire(x, y, t, p, _bounds3(t, batcher), batcher.capacity, spill=False)
+    # Wide window-relative deltas (dt > 0xFFFF) are also caught.
+    t2 = np.array([0, 1, 200_000, 200_001], np.int64)
+    z = np.zeros(4, np.int64)
+    with pytest.raises(ValueError, match="spill lane is disabled"):
+        pack_wire(z, z, t2, z, [(0, 4, 0)], 8, spill=False)
+
+
+def test_pack_bounds_into_ragged_requires_out_and_capacity():
+    z = np.zeros(4, np.int64)
+    with pytest.raises(TypeError, match="out= wire tuple"):
+        pack_bounds_into(z, z, z, z, [(0, 4, 0)], layout="ragged")
+    words = np.zeros(WIRE_QUANTUM, np.uint32)
+    dt = np.zeros(WIRE_QUANTUM, np.uint16)
+    pb = np.zeros(WIRE_QUANTUM, np.uint8)
+    off = np.zeros(2, np.int32)
+    with pytest.raises(TypeError, match="capacity"):
+        pack_bounds_into(
+            z, z, z, z, [(0, 4, 0)], out=(words, dt, pb, off), layout="ragged"
+        )
+    with pytest.raises(ValueError, match="unknown pack layout"):
+        pack_bounds_into(z, z, z, z, [(0, 4, 0)], layout="csr")
+
+
+def test_wire_pad_and_byte_accounting():
+    assert wire_pad(0) == WIRE_QUANTUM
+    assert wire_pad(1) == WIRE_QUANTUM
+    assert wire_pad(WIRE_QUANTUM) == WIRE_QUANTUM
+    assert wire_pad(WIRE_QUANTUM + 1) == 2 * WIRE_QUANTUM
+    assert WIRE_QUANTUM % 32 == 0  # the polarity bitplane stays integral
+    assert spill_pad(0) == 0
+    assert spill_pad(1) == SPILL_QUANTUM
+    # Ragged wins by construction at full occupancy, slot for slot:
+    # 6.125 B/slot vs 17 B/slot, before padding.
+    s, w, cap = 8, 1, 256
+    n = s * w * cap
+    assert ragged_wire_bytes(wire_pad(n), s, w, 0) < dense_wire_bytes(s, w, cap)
+    assert SPILL_SENTINEL == np.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: fleet and streaming dense-vs-ragged differentials.
+# ---------------------------------------------------------------------------
+
+def _chunk_stream(stream, cuts):
+    x, y, t, p = stream
+    out, prev = [], 0
+    for c in list(cuts) + [len(t)]:
+        out.append((x[prev:c], y[prev:c], t[prev:c], p[prev:c]))
+        prev = c
+    return out
+
+
+def _assert_results_equal(got, want, label):
+    bad = compare_outputs(concat_outputs(got), concat_outputs(want), label)
+    assert not bad, bad
+
+
+def _run_fleet(config, wire, rounds, n_sensors):
+    fp = FleetPipeline(config, n_sensors=n_sensors, wire=wire)
+    res = [fp.feed(r) for r in rounds] + [fp.flush()]
+    return fp, res
+
+
+def test_fleet_ragged_bitwise_equals_dense():
+    """Multi-sensor fleet, randomized per-sensor chunk cuts, one idle
+    sensor per round: ragged == dense on every surface."""
+    rng = np.random.default_rng(11)
+    n_sensors, n_rounds = 3, 5
+    streams = [_spaced_stream(seed=30 + s, n=1200) for s in range(n_sensors)]
+    per_sensor = [
+        _chunk_stream(streams[s], sorted(rng.integers(1, 1200, n_rounds - 1)))
+        for s in range(n_sensors)
+    ]
+    rounds = [
+        [per_sensor[s][r] if (r + s) % 4 else None for s in range(n_sensors)]
+        for r in range(n_rounds)
+    ]
+    _, dense = _run_fleet(CONFIG, "dense", rounds, n_sensors)
+    fp, ragged = _run_fleet(CONFIG, "ragged", rounds, n_sensors)
+    for s in range(n_sensors):
+        _assert_results_equal(
+            [r.sensor(s) for r in ragged],
+            [r.sensor(s) for r in dense],
+            f"fleet/sensor{s}",
+        )
+    assert fp.wire_stats.rounds > 0
+    assert fp.wire_stats.compression > 1.0
+    assert fp.wire_stats.wire_bytes < fp.wire_stats.dense_bytes
+
+
+def test_fleet_ragged_spill_path_bitwise_equals_dense():
+    """Sparse events under a 200 ms time threshold produce window-relative
+    deltas past the 16-bit lane — the spill lane carries them and the
+    outputs stay bit-identical (stats confirm the lane was exercised)."""
+    config = dataclasses.replace(
+        CONFIG, batcher=BatcherConfig(time_threshold_us=200_000)
+    )
+    rng = np.random.default_rng(5)
+    n = 400
+    stream = (
+        rng.integers(0, 640, n).astype(np.int64),
+        rng.integers(0, 480, n).astype(np.int64),
+        np.sort(rng.integers(0, 2_000_000, n)),
+        rng.integers(0, 2, n).astype(np.int64),
+    )
+    rounds = [[c] for c in _chunk_stream(stream, [120, 260])]
+    _, dense = _run_fleet(config, "dense", rounds, 1)
+    fp, ragged = _run_fleet(config, "ragged", rounds, 1)
+    _assert_results_equal(
+        [r.sensor(0) for r in ragged], [r.sensor(0) for r in dense], "spill"
+    )
+    assert fp.wire_stats.spilled > 0
+
+
+def test_streaming_ragged_bitwise_equals_dense():
+    x, y, t, p = _spaced_stream(seed=77, n=1500)
+    cuts = [0, 333, 700, 701, 1100]
+    dense_sp = StreamingPipeline(CONFIG, wire="dense")
+    ragged_sp = StreamingPipeline(CONFIG, wire="ragged")
+    got, want = [], []
+    for c in _chunk_stream((x, y, t, p), cuts):
+        want.append(dense_sp.feed(*c))
+        got.append(ragged_sp.feed(*c))
+    want.append(dense_sp.flush())
+    got.append(ragged_sp.flush())
+    _assert_results_equal(got, want, "stream")
+    assert ragged_sp.wire_stats.compression > 1.0
+    assert dense_sp.wire_stats.compression == 1.0
+
+
+def test_wire_mode_validated():
+    with pytest.raises(ValueError, match="unknown wire mode"):
+        FleetPipeline(CONFIG, wire="csr")
+    with pytest.raises(ValueError, match="unknown wire mode"):
+        StreamingPipeline(CONFIG, wire="packed")
+
+
+# ---------------------------------------------------------------------------
+# Service-level: churny differential at pipeline depths 1 and 3.
+# ---------------------------------------------------------------------------
+
+def _drive_service(config, wire, depth, n_rounds=8, chunk=100):
+    """Seeded churn schedule: attach ramp, random chunk sizes, a detach,
+    slot recycling. Returns per-session output part lists."""
+    svc = DetectionService(
+        config,
+        tiers=(2, 4),
+        admission=AdmissionConfig(max_delay_s=1e9, max_items=1 << 30),
+        clock=FakeClock(),
+        max_inflight_rounds=depth,
+        wire=wire,
+    )
+    rng = np.random.default_rng(0xC0FFEE)
+    streams, parts, live = {}, {}, []
+
+    def attach():
+        sid = svc.attach()
+        streams[sid] = {
+            "data": _spaced_stream(seed=900 + sid, n=n_rounds * 2 * chunk),
+            "pos": 0,
+        }
+        parts[sid] = []
+        live.append(sid)
+
+    def collect(served):
+        for f in served:
+            parts[f.sid].append(f.result)
+
+    attach()
+    attach()
+    for r in range(n_rounds):
+        if r == 2:
+            attach()  # tier promotion territory on round 3
+        if r == 5:
+            sid = live.pop(0)
+            parts[sid].append(svc.detach(sid))
+            attach()  # recycled slot
+        for sid in live:
+            rec = streams[sid]
+            n = int(rng.integers(40, 2 * chunk))
+            x, y, t, p = rec["data"]
+            pos = rec["pos"]
+            collect(svc.feed(sid, x[pos:pos + n], y[pos:pos + n],
+                             t[pos:pos + n], p[pos:pos + n]))
+            rec["pos"] = pos + n
+        collect(svc.pump(force=True))
+    for sid in list(live):
+        parts[sid].append(svc.detach(sid))
+    return svc, parts
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_service_ragged_bitwise_equals_dense(depth):
+    _, want = _drive_service(CONFIG, "dense", depth)
+    svc, got = _drive_service(CONFIG, "ragged", depth)
+    assert set(got) == set(want)
+    for sid in want:
+        _assert_results_equal(got[sid], want[sid], f"svc-d{depth}/s{sid}")
+    assert svc.wire_stats.compression > 1.0
+
+
+@pytest.mark.parametrize("config", [FIXED, MEGA], ids=["fixed", "megakernel"])
+def test_service_ragged_equals_dense_fixed_routes(config):
+    """The compressed wire is numerics-agnostic: the fixed-point and
+    fused-megakernel datapaths see identical reconstructed planes (small
+    shapes — the megakernel runs in interpret mode on CPU)."""
+    cfg = dataclasses.replace(
+        config, batcher=BatcherConfig(size_threshold=50, capacity=64)
+    )
+    _, want = _drive_service(cfg, "dense", 1, n_rounds=3, chunk=50)
+    _, got = _drive_service(cfg, "ragged", 1, n_rounds=3, chunk=50)
+    for sid in want:
+        _assert_results_equal(got[sid], want[sid], f"svc-fixed/s{sid}")
+
+
+def test_service_wire_stats_accounting():
+    svc, _ = _drive_service(CONFIG, "ragged", 1, n_rounds=3)
+    stats = svc.wire_stats
+    assert stats.rounds > 0 and stats.events > 0
+    assert stats.wire_bytes_per_round > 0
+    # Dense-equivalent accounting uses the same round shapes, so the
+    # ratio is bounded below by the per-slot byte ratio at the padding
+    # floor and above by 17 / 6.125 times the inverse occupancy.
+    assert 0 < stats.compression
+    assert stats.dense_bytes >= stats.wire_bytes or stats.compression < 1.0
